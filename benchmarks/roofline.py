@@ -1,0 +1,162 @@
+"""Roofline analysis over the dry-run artifacts (one row per arch x shape
+x mesh), per the three-term model:
+
+  compute    = HLO_FLOPs_per_chip / peak_FLOPs_per_chip
+  memory     = HLO_bytes_per_chip / HBM_bw_per_chip
+  collective = collective_bytes_per_chip / ICI_link_bw
+
+The compiled SPMD module is the per-chip program, so cost_analysis() and
+the HLO collective census are already per-chip; the assignment's
+"(chips x ...)" denominators cancel against global numerators.
+
+Hardware constants (TPU v5e, stated in EXPERIMENTS.md):
+  197 TFLOP/s bf16 per chip | 819 GB/s HBM | ~50 GB/s per ICI link.
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+from dataclasses import dataclass
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+
+ART_DIR = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+                       "experiments", "dryrun")
+
+
+@dataclass
+class RooflineRow:
+    arch: str
+    shape: str
+    mesh: str
+    kind: str
+    t_compute: float
+    t_memory: float
+    t_collective: float
+    bound: str
+    model_flops: float
+    hlo_flops_global: float
+    useful_ratio: float
+    roofline_frac: float
+    fix_hint: str
+
+    def step_time(self) -> float:
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+
+def model_flops(art: dict) -> float:
+    """6*N_active*D for training, 2*N_active*D for inference (derived from
+    the live config — artifacts may carry stale parameter counts)."""
+    from repro.configs import get_arch
+
+    cfg = get_arch(art["arch"])
+    active = cfg.active_params()
+    tokens = art["global_batch"] * (
+        art["seq_len"] if art["kind"] in ("train", "prefill") else 1
+    )
+    if cfg.enc_dec and art["kind"] in ("train", "prefill"):
+        # encoder sees S frames, decoder S/4 tokens, each through half the
+        # stack (approximation documented in EXPERIMENTS.md)
+        tokens = art["global_batch"] * (art["seq_len"] * 5 // 8)
+    c = 6.0 if art["kind"] == "train" else 2.0
+    return c * active * tokens
+
+
+_HINTS = {
+    ("compute", "train"): "compute-bound: raise MFU via fused attention "
+                          "kernel + less remat recompute",
+    ("compute", "prefill"): "compute-bound: fused flash-attention kernel "
+                            "lifts the attention FLOP efficiency",
+    ("compute", "decode"): "compute-bound (unusual for decode): shrink "
+                           "redundant per-token recompute",
+    ("memory", "train"): "memory-bound: increase arithmetic intensity "
+                         "(larger per-chip batch, fuse optimizer update)",
+    ("memory", "prefill"): "memory-bound: block-resident attention "
+                           "(flash) cuts HBM round-trips",
+    ("memory", "decode"): "memory-bound: expected for decode — weights/KV "
+                          "stream once per token; quantize KV or batch more",
+    ("collective", "train"): "collective-bound: overlap gradient "
+                             "reduce-scatter with backward; compress "
+                             "cross-pod traffic (int8 EF)",
+    ("collective", "prefill"): "collective-bound: reshard to cut activation "
+                               "all-gathers (seq-parallel attention)",
+    ("collective", "decode"): "collective-bound: KV-shard alignment; keep "
+                              "decode collectives to one all-reduce/layer",
+}
+
+
+def analyze(art: dict) -> RooflineRow:
+    # trip-count-corrected per-chip totals (repro.launch.hlo_cost); the raw
+    # cost_analysis() numbers undercount while-loop bodies and are kept in
+    # the artifact only for reference
+    hc = art["hlo_cost"]
+    flops_dev = hc["flops"]
+    bytes_dev = hc["hbm_proxy_bytes"]
+    # deployment-dtype projection when present (CPU float-normalization
+    # promotes bf16 collectives to f32; TPU keeps them bf16)
+    coll_dev = hc.get("coll_bytes_dtype", hc["coll_bytes"])
+    t_c = flops_dev / PEAK_FLOPS
+    t_m = bytes_dev / HBM_BW
+    t_x = coll_dev / ICI_BW
+    bound = max(
+        (("compute", t_c), ("memory", t_m), ("collective", t_x)),
+        key=lambda kv: kv[1],
+    )[0]
+    mf = model_flops(art)
+    hlo_global = flops_dev * art["n_devices"]
+    useful = mf / hlo_global if hlo_global else 0.0
+    step = max(t_c, t_m, t_x)
+    # achieved fraction of the compute roofline if the dominant term were
+    # perfectly overlapped with the rest
+    frac = (mf / art["n_devices"] / PEAK_FLOPS) / step if step else 0.0
+    return RooflineRow(
+        arch=art["arch"], shape=art["shape"], mesh=art["mesh"],
+        kind=art["kind"], t_compute=t_c, t_memory=t_m, t_collective=t_x,
+        bound=bound, model_flops=mf, hlo_flops_global=hlo_global,
+        useful_ratio=useful, roofline_frac=frac,
+        fix_hint=_HINTS[(bound, art["kind"])],
+    )
+
+
+def load_artifacts(mesh: str = "pod16x16") -> list[dict]:
+    arts = []
+    for path in sorted(glob.glob(os.path.join(ART_DIR, f"*__{mesh}.json"))):
+        with open(path) as f:
+            arts.append(json.load(f))
+    return arts
+
+
+def render(rows: list[RooflineRow]) -> str:
+    head = (
+        "| arch | shape | compute s | memory s | collective s | bound | "
+        "useful (6ND/HLO) | roofline frac |\n"
+        "|---|---|---|---|---|---|---|---|"
+    )
+    body = [
+        f"| {r.arch} | {r.shape} | {r.t_compute:.4f} | {r.t_memory:.4f} | "
+        f"{r.t_collective:.4f} | {r.bound} | {r.useful_ratio:.3f} | "
+        f"{r.roofline_frac:.3f} |"
+        for r in rows
+    ]
+    return "\n".join([head] + body)
+
+
+def main(csv: bool = True) -> list[RooflineRow]:
+    arts = load_artifacts()
+    rows = [analyze(a) for a in arts]
+    rows.sort(key=lambda r: r.roofline_frac)
+    print(render(rows))
+    if csv:
+        print("\nname,us_per_call,derived")
+        for r in rows:
+            print(f"roofline/{r.arch}/{r.shape},{r.step_time()*1e6:.1f},"
+                  f"frac={r.roofline_frac:.3f};bound={r.bound}")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

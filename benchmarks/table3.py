@@ -1,0 +1,54 @@
+"""Paper Table III reproduction: resource / utilization / performance /
+power for the six (n, m) configurations, from the compiled SPD LBM PE +
+the calibrated platform model, diffed against the paper's measurements."""
+
+from __future__ import annotations
+
+import time
+
+from repro.apps import lbm
+from repro.core.dse import (
+    FPGAModel,
+    StreamWorkload,
+    TABLE3_MEASURED,
+    render_table,
+)
+
+
+def run() -> list[str]:
+    out = []
+    t0 = time.time()
+    prob = lbm.LBMProblem(300, 720, mode="wrap")
+    sim = lbm.LBMSimulation(prob)
+    rep = sim.hardware_report
+    w = StreamWorkload.from_report(rep, elems=720 * 300, grid_w=720)
+    model = FPGAModel()
+    build_us = (time.time() - t0) * 1e6
+
+    out.append("## Paper Table III reproduction (compiled SPD PE -> model)")
+    out.append(f"PE: {rep.flops} FP ops ({rep.census}), depth {rep.depth}")
+    pts = []
+    for (n, m), meas in sorted(TABLE3_MEASURED.items()):
+        pt = model.evaluate(w, n, m, rep.census)
+        pts.append(pt)
+        du = abs(pt.utilization - meas[4])
+        dp = abs(pt.sustained_gflops - meas[5]) / meas[5]
+        dw = abs(pt.power_w - meas[6]) / meas[6]
+        out.append(
+            f"(n={n},m={m}): sustained {pt.sustained_gflops:6.1f} GF/s "
+            f"(paper {meas[5]:6.1f}, d={dp*100:4.1f}%)  u {pt.utilization:.3f} "
+            f"(paper {meas[4]:.3f}, d={du:.3f})  {pt.power_w:5.1f} W "
+            f"(paper {meas[6]:5.1f}, d={dw*100:4.1f}%)"
+        )
+    out.append(render_table(pts))
+    best = max((p for p in pts if p.feasible), key=lambda p: p.perf_per_watt)
+    out.append(
+        f"best perf/W: (n={best.n},m={best.m}) {best.perf_per_watt:.3f} "
+        f"GF/sW -- paper: (1,4) 2.416 GF/sW"
+    )
+    out.append(f"table3,{build_us:.0f},best=({best.n}-{best.m})")
+    return out
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

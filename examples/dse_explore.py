@@ -1,0 +1,54 @@
+"""Design-space exploration walkthrough — the paper's workflow as a tool:
+compile an SPD workload, sweep (n, m) on the FPGA model, sweep temporal
+blocking on the TPU model, and plan LM meshes with the same trade-off.
+
+    PYTHONPATH=src python examples/dse_explore.py --arch kimi-k2-1t-a32b
+"""
+
+import argparse
+
+from repro.apps import lbm
+from repro.configs import ARCHS, get_arch
+from repro.core.dse import FPGAModel, StreamWorkload, TPUModel, render_table
+from repro.core.planner import ArchStats, plan, render_plans
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="granite-34b")
+    ap.add_argument("--chips", type=int, default=256)
+    ap.add_argument("--batch", type=int, default=256)
+    ap.add_argument("--seq", type=int, default=4096)
+    args = ap.parse_args()
+
+    print("=" * 72)
+    print("1) The paper's case study: LBM on the Stratix V model")
+    print("=" * 72)
+    sim = lbm.LBMSimulation(lbm.LBMProblem(300, 720, mode="wrap"))
+    w = StreamWorkload.from_report(sim.hardware_report, elems=720 * 300,
+                                   grid_w=720)
+    print(render_table(FPGAModel().explore(w)))
+
+    print()
+    print("=" * 72)
+    print("2) Hardware adaptation: temporal blocking on TPU v5e")
+    print("=" * 72)
+    print(render_table(TPUModel().explore(w)[:8]))
+
+    print()
+    print("=" * 72)
+    print(f"3) The same trade on an LM fleet: {args.arch} on "
+          f"{args.chips} chips")
+    print("   (spatial n -> dp, temporal m -> pp, in-PE -> tp)")
+    print("=" * 72)
+    cfg = get_arch(args.arch)
+    stats = ArchStats(
+        name=cfg.name, params=cfg.num_params(),
+        active_params=cfg.active_params(), n_layers=cfg.n_layers,
+        d_model=cfg.d_model, global_batch=args.batch, seq_len=args.seq,
+    )
+    print(render_plans(plan(stats, args.chips), top=10))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,8 @@
+"""repro: DSL-based design-space exploration for temporal x spatial
+parallel stream computing (Sano 2015), as a multi-pod JAX/Pallas framework.
+
+Subpackages: core (SPD DSL + DSE), apps (LBM), kernels (Pallas),
+models (assigned architectures), parallel (sharding/PP/compression),
+train, serve, configs, launch."""
+
+__version__ = "1.0.0"

@@ -1,0 +1,1 @@
+"""Applications built on the SPD stream-computing core."""

@@ -1,0 +1,34 @@
+"""The paper's primary contribution: the SPD stream-computing DSL, its
+compiler to JAX, (n, m) parallelism transforms, and the design-space
+exploration engine."""
+
+from .compiler import CompiledCore, Registry, SPDCompileError
+from .dfg import Core, Node, SPDError, SPDGraphError, schedule
+from .library import LibraryModule, default_registry_modules
+from .spd import SPDParseError, parse_spd, parse_spd_file
+from .transforms import (
+    spatial_duplicate,
+    spatial_duplicate_spd,
+    temporal_cascade,
+    temporal_cascade_spd,
+)
+
+__all__ = [
+    "CompiledCore",
+    "Core",
+    "LibraryModule",
+    "Node",
+    "Registry",
+    "SPDCompileError",
+    "SPDError",
+    "SPDGraphError",
+    "SPDParseError",
+    "default_registry_modules",
+    "parse_spd",
+    "parse_spd_file",
+    "schedule",
+    "spatial_duplicate",
+    "spatial_duplicate_spd",
+    "temporal_cascade",
+    "temporal_cascade_spd",
+]

@@ -1,0 +1,272 @@
+"""SPD core -> JAX stream function compiler.
+
+Where the paper's compiler emits a pipelined Verilog datapath, this one emits
+a JAX dataflow function: EQU nodes become ``jnp`` expression trees, HDL nodes
+become library-module or (recursively) sub-core calls, and DRCT lines become
+wiring. The pipeline *timing* side (delay balancing, depth) is computed by
+``repro.core.dfg.schedule`` and retained as the hardware performance model
+that drives design-space exploration.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from functools import cached_property
+from typing import Mapping, Sequence
+
+import jax.numpy as jnp
+
+from .dfg import (
+    Bin,
+    Call,
+    Core,
+    Expr,
+    Neg,
+    Node,
+    Num,
+    SPDError,
+    Schedule,
+    Var,
+    expr_op_census,
+    flop_count,
+    op_census,
+    schedule,
+)
+from .library import LibraryModule, default_registry_modules
+
+
+class SPDCompileError(SPDError):
+    pass
+
+
+# --------------------------------------------------------------------------
+# Module registry
+# --------------------------------------------------------------------------
+
+
+class Registry:
+    """Resolves HDL module names to library modules or compiled sub-cores."""
+
+    def __init__(self, include_default_library: bool = True):
+        self._lib: dict[str, LibraryModule] = {}
+        self._cores: dict[str, "CompiledCore"] = {}
+        if include_default_library:
+            for m in default_registry_modules():
+                self.register_library(m)
+
+    def register_library(self, mod: LibraryModule) -> None:
+        self._lib[mod.name] = mod
+
+    def register_core(self, compiled: "CompiledCore") -> None:
+        self._cores[compiled.core.name] = compiled
+
+    def lookup(self, name: str):
+        if name in self._cores:
+            return self._cores[name]
+        if name in self._lib:
+            return self._lib[name]
+        raise SPDCompileError(f"unknown HDL module {name!r}")
+
+    def compile(self, core: Core) -> "CompiledCore":
+        compiled = CompiledCore(core, self)
+        self.register_core(compiled)
+        return compiled
+
+
+# --------------------------------------------------------------------------
+# EQU evaluation
+# --------------------------------------------------------------------------
+
+_CALL_IMPL = {
+    "sqrt": jnp.sqrt,
+    "rsqrt": lambda x: 1.0 / jnp.sqrt(x),
+    "abs": jnp.abs,
+    "exp": jnp.exp,
+    "min": jnp.minimum,
+    "max": jnp.maximum,
+}
+
+
+def eval_expr(e: Expr, env: Mapping[str, jnp.ndarray]):
+    if isinstance(e, Num):
+        return jnp.float32(e.value)
+    if isinstance(e, Var):
+        try:
+            return env[e.name]
+        except KeyError:
+            raise SPDCompileError(f"unbound variable {e.name!r}") from None
+    if isinstance(e, Neg):
+        return -eval_expr(e.arg, env)
+    if isinstance(e, Bin):
+        a, b = eval_expr(e.lhs, env), eval_expr(e.rhs, env)
+        if e.op == "+":
+            return a + b
+        if e.op == "-":
+            return a - b
+        if e.op == "*":
+            return a * b
+        return a / b
+    if isinstance(e, Call):
+        args = [eval_expr(a, env) for a in e.args]
+        return _CALL_IMPL[e.fn](*args)
+    raise TypeError(f"unknown expr {e!r}")
+
+
+# --------------------------------------------------------------------------
+# Compiled core
+# --------------------------------------------------------------------------
+
+
+@dataclass
+class HardwareReport:
+    """The DSE-facing summary of one core's synthesized shape."""
+
+    name: str
+    depth: int  # pipeline depth d (cycles)
+    census: dict  # FP operator counts
+    flops: int  # N_Flops: FP ops performed per streamed element
+    balance_regs: int  # delay-balancing registers inserted (word-cycles)
+    buffer_bits: int  # stencil/delay buffer bits (BRAM analogue)
+    stream_in_words: int  # main-input words per element (bandwidth model)
+    stream_out_words: int
+
+
+class CompiledCore:
+    """An SPD core compiled to a callable JAX dataflow function."""
+
+    def __init__(self, core: Core, registry: Registry):
+        self.core = core
+        self.registry = registry
+        core.toposort()  # validate graph at compile time
+
+    # ---- hardware model ----------------------------------------------------
+
+    def _node_params(self, node: Node) -> dict:
+        mod = self.registry.lookup(node.module)
+        if isinstance(mod, LibraryModule):
+            return mod.resolve_params(node, self.core.params)
+        return {}
+
+    def _hdl_delay(self, node: Node) -> int:
+        mod = self.registry.lookup(node.module)
+        if isinstance(mod, LibraryModule):
+            return mod.delay_fn(self._node_params(node))
+        # Sub-core: the declared delay (paper semantics: statically known).
+        # Fall back to the sub-core's scheduled depth when undeclared.
+        if node.delay is not None and node.delay > 0:
+            return node.delay
+        return mod.schedule.depth
+
+    def _hdl_census(self, node: Node) -> dict:
+        mod = self.registry.lookup(node.module)
+        if isinstance(mod, LibraryModule):
+            return mod.census_fn(self._node_params(node))
+        return mod.census
+
+    @cached_property
+    def schedule(self) -> Schedule:
+        return schedule(self.core, self._hdl_delay)
+
+    @cached_property
+    def census(self) -> dict:
+        return op_census(self.core, self._hdl_census)
+
+    @cached_property
+    def flops(self) -> int:
+        return flop_count(self.census)
+
+    @cached_property
+    def buffer_bits(self) -> int:
+        total = self.schedule.balance_regs * 32
+        for n in self.core.nodes:
+            if n.kind != "hdl":
+                continue
+            mod = self.registry.lookup(n.module)
+            if isinstance(mod, LibraryModule):
+                total += mod.buffer_bits_fn(self._node_params(n))
+            else:
+                total += mod.buffer_bits
+        return total
+
+    @cached_property
+    def hardware_report(self) -> HardwareReport:
+        s = self.schedule
+        return HardwareReport(
+            name=self.core.name,
+            depth=s.depth,
+            census=dict(self.census),
+            flops=self.flops,
+            balance_regs=s.balance_regs,
+            buffer_bits=self.buffer_bits,
+            stream_in_words=len(self.core.main_input_ports()),
+            stream_out_words=len(self.core.main_output_ports()),
+        )
+
+    # ---- execution -----------------------------------------------------------
+
+    def apply(self, inputs: Sequence) -> list:
+        """Positional call: inputs ordered main_in + brch_in + regs,
+        outputs ordered main_out + brch_out (matches SPD module-call syntax).
+        """
+        names = self.core.input_ports()
+        if len(inputs) != len(names):
+            raise SPDCompileError(
+                f"core {self.core.name}: expected {len(names)} inputs "
+                f"({names}), got {len(inputs)}"
+            )
+        env: dict = dict(zip(names, inputs))
+        env.update({k: jnp.float32(v) for k, v in self.core.params.items()})
+        alias = self.core.alias_map()
+
+        for node in self.core.toposort():
+            ins = [env[alias.get(v, v)] for v in node.inputs]
+            if node.kind == "equ":
+                ins_f32 = {
+                    v: jnp.asarray(env[alias.get(v, v)], jnp.float32)
+                    for v in node.inputs
+                }
+                local = dict(env)
+                local.update(ins_f32)
+                env[node.outputs[0]] = eval_expr(node.expr, local)
+            else:
+                mod = self.registry.lookup(node.module)
+                if isinstance(mod, LibraryModule):
+                    outs = mod.apply(ins, mod.resolve_params(node, self.core.params))
+                else:
+                    outs = mod.apply(ins)
+                if len(outs) != len(node.outputs):
+                    raise SPDCompileError(
+                        f"node {node.name}: module {node.module} returned "
+                        f"{len(outs)} outputs, node declares {len(node.outputs)}"
+                    )
+                for name, val in zip(node.outputs, outs):
+                    env[name] = val
+
+        out_names = self.core.output_ports()
+        outs = []
+        for p in out_names:
+            src = alias.get(p, p)
+            if src not in env:
+                raise SPDCompileError(
+                    f"core {self.core.name}: output port {p!r} undriven"
+                )
+            outs.append(env[src])
+        return outs
+
+    def __call__(self, main_in: Mapping, brch_in: Mapping | None = None,
+                 regs: Mapping | None = None):
+        """Named call returning ``(main_out: dict, brch_out: dict)``."""
+        brch_in = brch_in or {}
+        regs = regs or {}
+        args = []
+        for p in self.core.main_input_ports():
+            args.append(main_in[p])
+        for p in self.core.brch_input_ports():
+            args.append(brch_in[p])
+        for p in self.core.regs:
+            args.append(regs[p])
+        outs = self.apply(args)
+        mo = self.core.main_output_ports()
+        main_out = dict(zip(mo, outs[: len(mo)]))
+        brch_out = dict(zip(self.core.brch_output_ports(), outs[len(mo):]))
+        return main_out, brch_out

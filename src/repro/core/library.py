@@ -1,0 +1,217 @@
+"""The SPD HDL-node library, implemented over JAX streams.
+
+The paper ships these library modules (§II-D): Synchronous multiplexer,
+Comparator, Eliminator, Delay, Stream forward, Stream backward, and 2D stencil
+buffer. Here each becomes a :class:`LibraryModule`: a JAX dataflow
+implementation plus a pipeline-delay/resource oracle for the hardware model.
+
+Stream convention: a stream variable is a JAX array whose *leading* axes are
+the stream coordinates. 1-D modules (Delay/Forward/Backward) shift along axis
+0 of a flat stream; ``Stencil2D`` treats the stream as a row-major 2-D field
+``(H, W[, ...lanes])`` — the 2-D analogue of the paper's Eq. (4) offsets
+``x_{t±1}, x_{t±W}``.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable, Mapping, Sequence
+
+import jax.numpy as jnp
+
+from .dfg import Node, SPDError
+
+
+class SPDModuleError(SPDError):
+    pass
+
+
+def _shift0(x, k: int, fill=0.0):
+    """out[t] = x[t-k] (k>0: delay; k<0: forward), zero fill."""
+    if k == 0:
+        return x
+    pad = jnp.full((abs(k),) + x.shape[1:], fill, dtype=x.dtype)
+    if k > 0:
+        return jnp.concatenate([pad, x[:-k]], axis=0)
+    return jnp.concatenate([x[-k:], pad], axis=0)
+
+
+def _shift2d(x, dy: int, dx: int, mode: str):
+    """out[y, x] = in[y-dy, x-dx]; mode in {'wrap', 'zero'}."""
+    if mode == "wrap":
+        out = x
+        if dy:
+            out = jnp.roll(out, dy, axis=0)
+        if dx:
+            out = jnp.roll(out, dx, axis=1)
+        return out
+    if mode != "zero":
+        raise SPDModuleError(f"Stencil2D: unknown boundary mode {mode!r}")
+    out = x
+    if dy:
+        pad = jnp.zeros((abs(dy),) + x.shape[1:], x.dtype)
+        out = (
+            jnp.concatenate([pad, out[:-dy]], axis=0)
+            if dy > 0
+            else jnp.concatenate([out[-dy:], pad], axis=0)
+        )
+    if dx:
+        pad = jnp.zeros((out.shape[0], abs(dx)) + out.shape[2:], x.dtype)
+        out = (
+            jnp.concatenate([pad, out[:, :-dx]], axis=1)
+            if dx > 0
+            else jnp.concatenate([out[:, -dx:], pad], axis=1)
+        )
+    return out
+
+
+@dataclass
+class LibraryModule:
+    """A leaf HDL module: JAX impl + hardware-model oracles."""
+
+    name: str
+    n_in: int
+    n_out: int
+    param_names: tuple[str, ...]
+    impl: Callable[[Sequence, Mapping], list]
+    delay_fn: Callable[[Mapping], int]
+    census_fn: Callable[[Mapping], dict] = lambda p: {}
+    # Estimated on-chip buffer bits consumed (BRAM analogue), for the DSE.
+    buffer_bits_fn: Callable[[Mapping], int] = lambda p: 0
+
+    def resolve_params(self, node: Node, core_params: Mapping[str, float]) -> dict:
+        """Bind an HDL node's positional/named params against this module."""
+        out: dict = {}
+        pos = 0
+        for raw in node.params:
+            if "=" in raw:
+                k, v = raw.split("=", 1)
+                out[k.strip()] = _coerce(v.strip(), core_params)
+            else:
+                if pos >= len(self.param_names):
+                    raise SPDModuleError(
+                        f"{self.name}: too many params on node {node.name}"
+                    )
+                out[self.param_names[pos]] = _coerce(raw.strip(), core_params)
+                pos += 1
+        return out
+
+    def apply(self, inputs: Sequence, params: Mapping) -> list:
+        if self.n_in >= 0 and len(inputs) != self.n_in:
+            raise SPDModuleError(
+                f"{self.name}: expected {self.n_in} inputs, got {len(inputs)}"
+            )
+        outs = self.impl(inputs, params)
+        if self.n_out >= 0 and len(outs) != self.n_out:
+            raise SPDModuleError(
+                f"{self.name}: produced {len(outs)} outputs, expected {self.n_out}"
+            )
+        return outs
+
+
+def _coerce(v: str, core_params: Mapping[str, float]):
+    if v in core_params:
+        return core_params[v]
+    try:
+        f = float(v)
+        return int(f) if f == int(f) else f
+    except ValueError:
+        return v  # string param (e.g. boundary mode, comparator op)
+
+
+# --------------------------------------------------------------------------
+# Module implementations
+# --------------------------------------------------------------------------
+
+
+def _delay_impl(ins, p):
+    return [_shift0(ins[0], int(p.get("k", 1)))]
+
+
+def _forward_impl(ins, p):
+    return [_shift0(ins[0], -int(p.get("k", 1)))]
+
+
+def _mux_impl(ins, p):
+    sel, a, b = ins
+    return [jnp.where(sel != 0, a, b)]
+
+
+_CMP_OPS = {
+    "eq": lambda a, b: a == b,
+    "ne": lambda a, b: a != b,
+    "lt": lambda a, b: a < b,
+    "le": lambda a, b: a <= b,
+    "gt": lambda a, b: a > b,
+    "ge": lambda a, b: a >= b,
+}
+
+
+def _cmp_impl(ins, p):
+    op = p.get("op", "eq")
+    if op not in _CMP_OPS:
+        raise SPDModuleError(f"Comparator: unknown op {op!r}")
+    a, b = ins
+    return [_CMP_OPS[op](a, b).astype(jnp.float32)]
+
+
+def _eliminator_impl(ins, p):
+    # Hardware semantics: drop elements with enable==0 (stream compaction).
+    # Fixed-shape dataflow semantics: mask to zero; host-side compaction is
+    # provided by repro.core.transforms.compact_stream.
+    en, x = ins
+    return [jnp.where(en != 0, x, jnp.zeros_like(x))]
+
+
+def _stencil2d_impl(ins, p):
+    dy, dx = int(p.get("dy", 0)), int(p.get("dx", 0))
+    return [_shift2d(ins[0], dy, dx, str(p.get("mode", "zero")))]
+
+
+def _stencil2d_delay(p) -> int:
+    # The buffer must see max(dy,0) future rows + max(dx,0) future columns
+    # before the aligned element can leave; +2 for ingress/egress registers.
+    w = int(p.get("W", 0))
+    dy, dx = int(p.get("dy", 0)), int(p.get("dx", 0))
+    return max(-dy, 0) * max(w, 1) + max(-dx, 0) + 2
+
+
+def _stencil2d_bits(p) -> int:
+    w = int(p.get("W", 0))
+    dy = abs(int(p.get("dy", 0)))
+    return 32 * (dy * max(w, 1) + abs(int(p.get("dx", 0))) + 2)
+
+
+def default_registry_modules() -> list[LibraryModule]:
+    return [
+        LibraryModule(
+            "Delay", 1, 1, ("k",), _delay_impl,
+            delay_fn=lambda p: int(p.get("k", 1)),
+            buffer_bits_fn=lambda p: 32 * int(p.get("k", 1)),
+        ),
+        LibraryModule(
+            "StreamForward", 1, 1, ("k",), _forward_impl,
+            # Forward reference: everything else is delayed by k to meet it.
+            delay_fn=lambda p: int(p.get("k", 1)),
+            buffer_bits_fn=lambda p: 32 * int(p.get("k", 1)),
+        ),
+        LibraryModule(
+            "StreamBackward", 1, 1, ("k",), _delay_impl,
+            delay_fn=lambda p: int(p.get("k", 1)),
+            buffer_bits_fn=lambda p: 32 * int(p.get("k", 1)),
+        ),
+        LibraryModule(
+            "SyncMux", 3, 1, (), _mux_impl, delay_fn=lambda p: 2
+        ),
+        LibraryModule(
+            "Comparator", 2, 1, ("op",), _cmp_impl, delay_fn=lambda p: 2
+        ),
+        LibraryModule(
+            "Eliminator", 2, 1, (), _eliminator_impl, delay_fn=lambda p: 2
+        ),
+        LibraryModule(
+            "Stencil2D", 1, 1, ("dy", "dx", "W", "mode"), _stencil2d_impl,
+            delay_fn=_stencil2d_delay,
+            buffer_bits_fn=_stencil2d_bits,
+        ),
+    ]

@@ -1,0 +1,11 @@
+"""Pallas TPU kernels for the perf-critical compute layers:
+
+* ``lbm_stream``      — fused m-step D2Q9 LBM temporal blocking (the
+                        paper's cascaded-PE analogue in VMEM)
+* ``flash_attention`` — blocked online-softmax attention (causal / sliding
+                        window / GQA)
+
+Each kernel ships ``<name>.py`` (pl.pallas_call + BlockSpec), ``ops.py``
+(jit'd wrappers), and ``ref.py`` (pure-jnp oracle); validated in interpret
+mode on CPU, targeted at TPU.
+"""

@@ -1,0 +1,94 @@
+"""Pure-jnp oracles for blocked attention.
+
+``attention_ref``          — direct softmax attention (small shapes).
+``attention_chunked_ref``  — online-softmax over key chunks, O(S) memory;
+                             this is also the CPU/dry-run attention used by
+                             the models at long sequence lengths.
+
+Both support GQA (fewer KV heads), causal masking, and sliding windows.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+
+def _mask(sq, sk, q0, k0, causal: bool, window: int, dtype):
+    q_idx = q0 + jnp.arange(sq)[:, None]
+    k_idx = k0 + jnp.arange(sk)[None, :]
+    m = jnp.ones((sq, sk), dtype=jnp.bool_)
+    if causal:
+        m &= q_idx >= k_idx
+    if window > 0:
+        m &= q_idx - k_idx < window
+    return m
+
+
+def _repeat_kv(k, n_rep: int):
+    if n_rep == 1:
+        return k
+    b, h, s, d = k.shape
+    return jnp.broadcast_to(k[:, :, None], (b, h, n_rep, s, d)).reshape(
+        b, h * n_rep, s, d
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "scale"))
+def attention_ref(q, k, v, causal: bool = True, window: int = 0,
+                  scale: float | None = None):
+    """Direct attention. q: (B, Hq, Sq, D); k/v: (B, Hkv, Sk, D)."""
+    b, hq, sq, d = q.shape
+    hkv, sk = k.shape[1], k.shape[2]
+    k = _repeat_kv(k, hq // hkv)
+    v = _repeat_kv(v, hq // hkv)
+    scale = scale if scale is not None else d ** -0.5
+    logits = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    # align the causal diagonal to the *end* of the KV (decode convention)
+    mask = _mask(sq, sk, sk - sq, 0, causal, window, logits.dtype)
+    logits = jnp.where(mask[None, None], logits, -1e30)
+    p = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p, v.astype(jnp.float32)).astype(q.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("causal", "window", "scale", "chunk")
+)
+def attention_chunked_ref(q, k, v, causal: bool = True, window: int = 0,
+                          scale: float | None = None, chunk: int = 512):
+    """Online-softmax attention over key chunks (flash semantics, pure jnp)."""
+    b, hq, sq, d = q.shape
+    hkv, sk = k.shape[1], k.shape[2]
+    n_rep = hq // hkv
+    k = _repeat_kv(k, n_rep)
+    v = _repeat_kv(v, n_rep)
+    scale = scale if scale is not None else d ** -0.5
+    qf = q.astype(jnp.float32) * scale
+    if sk % chunk:
+        chunk = sk  # degenerate: single chunk
+    nck = sk // chunk
+    kc = k.reshape(b, hq, nck, chunk, d).astype(jnp.float32)
+    vc = v.reshape(b, hq, nck, chunk, d).astype(jnp.float32)
+
+    def body(carry, idx):
+        acc, m_i, l_i = carry
+        kb = kc[:, :, idx]
+        vb = vc[:, :, idx]
+        s = jnp.einsum("bhqd,bhkd->bhqk", qf, kb)
+        msk = _mask(sq, chunk, sk - sq, idx * chunk, causal, window, s.dtype)
+        s = jnp.where(msk[None, None], s, -1e30)
+        m_new = jnp.maximum(m_i, s.max(-1))
+        alpha = jnp.exp(m_i - m_new)
+        p = jnp.exp(s - m_new[..., None])
+        acc = acc * alpha[..., None] + jnp.einsum("bhqk,bhkd->bhqd", p, vb)
+        l_i = l_i * alpha + p.sum(-1)
+        return (acc, m_new, l_i), None
+
+    acc0 = jnp.zeros((b, hq, sq, d), jnp.float32)
+    m0 = jnp.full((b, hq, sq), -jnp.inf, jnp.float32)
+    l0 = jnp.zeros((b, hq, sq), jnp.float32)
+    (acc, _, l_i), _ = jax.lax.scan(body, (acc0, m0, l0), jnp.arange(nck))
+    return (acc / jnp.maximum(l_i, 1e-30)[..., None]).astype(q.dtype)

@@ -1,0 +1,28 @@
+"""Public jit'd wrappers for the LBM temporal-blocking kernel."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from .lbm_stream import lbm_multistep
+from .ref import lbm_multistep_ref
+
+
+@functools.partial(jax.jit, static_argnames=("steps", "m", "block_h", "interpret"))
+def lbm_run_blocked(f, attr, one_tau, u_lid=0.0, *, steps: int, m: int = 4,
+                    block_h: int = 32, interpret: bool = True):
+    """Advance ``steps`` LBM time steps using m-fused kernel launches."""
+    if steps % m:
+        raise ValueError(f"steps={steps} must be a multiple of m={m}")
+
+    def body(_, g):
+        return lbm_multistep(
+            g, attr, one_tau, u_lid, m=m, block_h=block_h, interpret=interpret
+        )
+
+    return jax.lax.fori_loop(0, steps // m, body, f)
+
+
+__all__ = ["lbm_multistep", "lbm_multistep_ref", "lbm_run_blocked"]

@@ -1,0 +1,20 @@
+"""Pure-jnp oracle for the fused m-step LBM temporal-blocking kernel."""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.apps.lbm import ref_step
+
+
+@partial(jax.jit, static_argnames=("m",))
+def lbm_multistep_ref(f, attr, one_tau, u_lid, m: int):
+    """m periodic LBM steps: the semantics the kernel must reproduce."""
+
+    def body(_, g):
+        return ref_step(g, attr, one_tau, u_lid, mode="wrap")
+
+    return jax.lax.fori_loop(0, m, body, f)

@@ -1,0 +1,246 @@
+"""Trip-count-aware cost analysis of compiled (SPMD) HLO text.
+
+XLA's ``compiled.cost_analysis()`` counts while-loop bodies ONCE (verified:
+a 10-iteration scan of a matmul reports 1x the matmul FLOPs). Every scan in
+this codebase (layer stacks, microbatch accumulation, attention/SSD chunk
+loops) would therefore be undercounted by its trip count.
+
+This module re-derives costs from ``compiled.as_text()`` with loop
+multiplication:
+
+  * builds the computation call graph (while bodies, fusions, calls,
+    conditionals),
+  * infers static trip counts from each while condition's
+    ``compare(iv, constant(N))``,
+  * accumulates per-computation dot-FLOPs, collective bytes (result-shape
+    bytes of all-gather / all-reduce / reduce-scatter / all-to-all /
+    collective-permute), and an HBM-traffic proxy (top-level instruction
+    output bytes; fusion internals excluded since only fusion results
+    materialize),
+  * folds them up from ENTRY with multiplicity.
+
+The compiled module is per-device, so all totals are per-chip.
+"""
+
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s64": 8, "u64": 8,
+    "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1, "pred": 1,
+    "c64": 8, "c128": 16, "s4": 1, "u4": 1,
+}
+
+_COLLECTIVES = (
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+# "%name = f32[2,3]{1,0} op(...)" (also tuple types)
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(.*?)\s+([\w\-]+)\((.*)$"
+)
+_SHAPE_RE = re.compile(r"(\w+)\[([0-9,]*)\]")
+_COMP_HDR_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(.*->.*\{\s*$")
+_CALLED_RE = re.compile(r"(?:calls|to_apply|body|condition|branch_computations)="
+                        r"(?:%?([\w.\-]+)|\{([^}]*)\})")
+
+
+def _shape_elems_bytes(type_str: str) -> tuple[int, int]:
+    """Total elements and bytes across all shapes in a type string."""
+    elems = 0
+    total = 0
+    for m in _SHAPE_RE.finditer(type_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        elems += n
+        total += n * _DTYPE_BYTES[dt]
+    return elems, total
+
+
+def _first_shape_dims(type_str: str) -> list[int]:
+    m = _SHAPE_RE.search(type_str)
+    if not m:
+        return []
+    return [int(d) for d in m.group(2).split(",") if d]
+
+
+@dataclass
+class Computation:
+    name: str
+    dot_flops: float = 0.0
+    coll_bytes: float = 0.0
+    coll_elems: float = 0.0  # element count (for dtype-corrected bytes)
+    coll_counts: dict = field(default_factory=dict)
+    out_bytes: float = 0.0  # HBM-traffic proxy
+    # call sites: (callee, multiplier_kind) where kind 'while' resolves trip
+    calls: list = field(default_factory=list)  # (callee_name, trip or 1)
+    is_fusion_internal: bool = False
+
+
+def parse_hlo(text: str) -> dict[str, Computation]:
+    comps: dict[str, Computation] = {}
+    name_shape: dict[str, str] = {}  # instr name -> type string
+    cur: Computation | None = None
+    cond_const: dict[str, int] = {}  # cond computation -> constant bound
+    whiles: list[tuple[str, str, str]] = []  # (parent, body, cond)
+    entry: str | None = None
+    fusion_comps: set[str] = set()
+
+    lines = text.splitlines()
+    for line in lines:
+        hdr = _COMP_HDR_RE.match(line)
+        if hdr and ("{" in line):
+            name = hdr.group(1)
+            cur = comps.setdefault(name, Computation(name))
+            if line.startswith("ENTRY"):
+                entry = name
+            if name.startswith(("fused_", "wide.")) or ".fused" in name:
+                fusion_comps.add(name)
+            continue
+        if cur is None:
+            continue
+        m = _INSTR_RE.match(line)
+        if not m:
+            continue
+        iname, type_str, op, rest = m.groups()
+        name_shape[iname] = type_str
+
+        if op == "dot":
+            out_dims = _first_shape_dims(type_str)
+            out_elems = 1
+            for d in out_dims:
+                out_elems *= d
+            # contracting size from lhs shape + lhs_contracting_dims
+            lhs_m = re.match(r"\s*%?([\w.\-]+)", rest)
+            cd_m = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", line)
+            k = 1
+            if lhs_m and cd_m:
+                lhs_shape = _first_shape_dims(name_shape.get(lhs_m.group(1), ""))
+                for ci in cd_m.group(1).split(","):
+                    if ci and int(ci) < len(lhs_shape):
+                        k *= lhs_shape[int(ci)]
+            cur.dot_flops += 2.0 * out_elems * k
+        elif op in _COLLECTIVES or any(
+            op == f"{c}-start" for c in _COLLECTIVES
+        ):
+            base = op.replace("-start", "")
+            e, b = _shape_elems_bytes(type_str)
+            cur.coll_bytes += b
+            cur.coll_elems += e
+            cur.coll_counts[base] = cur.coll_counts.get(base, 0) + 1
+        elif op == "while":
+            body_m = re.search(r"body=%?([\w.\-]+)", line)
+            cond_m = re.search(r"condition=%?([\w.\-]+)", line)
+            if body_m and cond_m:
+                whiles.append((cur.name, body_m.group(1), cond_m.group(1)))
+        elif op == "fusion":
+            cm = re.search(r"calls=%?([\w.\-]+)", line)
+            if cm:
+                fusion_comps.add(cm.group(1))
+                # fused dots/collectives still execute; only their
+                # intermediate buffers vanish (out_bytes zeroed below)
+                cur.calls.append((cm.group(1), 1))
+        elif op in ("call", "custom-call"):
+            cm = re.search(r"to_apply=%?([\w.\-]+)", line)
+            if cm:
+                cur.calls.append((cm.group(1), 1))
+        elif op == "conditional":
+            bm = re.search(r"branch_computations=\{([^}]*)\}", line)
+            if bm:
+                for b in bm.group(1).split(","):
+                    cur.calls.append((b.strip().lstrip("%"), 1))
+            else:
+                for key in ("true_computation", "false_computation"):
+                    km = re.search(rf"{key}=%?([\w.\-]+)", line)
+                    if km:
+                        cur.calls.append((km.group(1), 1))
+
+        if op == "constant" and "s32[]" in type_str:
+            cm = re.search(r"constant\((\d+)\)", line)
+            if cm:
+                cond_const[cur.name] = max(
+                    cond_const.get(cur.name, 0), int(cm.group(1))
+                )
+
+        # HBM proxy: top-level (non-fusion-internal) instruction outputs;
+        # skip pure metadata ops
+        if op not in ("parameter", "constant", "get-tuple-element", "tuple",
+                      "bitcast"):
+            _, b = _shape_elems_bytes(type_str)
+            cur.out_bytes += b
+
+    # resolve while trips
+    for parent, body, cond in whiles:
+        trip = cond_const.get(cond, 1) or 1
+        comps.setdefault(parent, Computation(parent)).calls.append((body, trip))
+        comps.setdefault(parent, Computation(parent)).calls.append((cond, trip))
+
+    for fname in fusion_comps:
+        if fname in comps:
+            comps[fname].is_fusion_internal = True
+    comps["__entry__"] = comps.get(entry, Computation("__entry__"))
+    return comps
+
+
+@dataclass
+class HloCost:
+    flops: float
+    coll_bytes: float
+    coll_elems: float
+    coll_counts: dict
+    hbm_proxy_bytes: float
+    n_whiles: int
+
+    def coll_bytes_dtype(self, dtype_bytes: int) -> float:
+        """Collective bytes at the model's native dtype width.
+
+        The CPU backend's float-normalization pass rewrites every bf16 op
+        (including collectives) to f32, so measured wire bytes are 2x what
+        the same program moves on a TPU. This projects element counts back
+        to the deployment dtype (EXPERIMENTS.md §Roofline methodology)."""
+        return self.coll_elems * dtype_bytes
+
+
+def analyze_hlo(text: str) -> HloCost:
+    comps = parse_hlo(text)
+    entry = comps["__entry__"]
+    memo: dict[str, tuple] = {}
+    visiting: set[str] = set()
+
+    def fold(name: str):
+        if name in memo:
+            return memo[name]
+        if name in visiting or name not in comps:
+            return (0.0, 0.0, 0.0, {}, 0.0)
+        visiting.add(name)
+        c = comps[name]
+        fl, cb, ce, ob = c.dot_flops, c.coll_bytes, c.coll_elems, c.out_bytes
+        counts = dict(c.coll_counts)
+        if c.is_fusion_internal:
+            ob = 0.0  # fusion internals don't materialize
+        for callee, mult in c.calls:
+            cf, ccb, cce, ccnt, cob = fold(callee)
+            fl += mult * cf
+            cb += mult * ccb
+            ce += mult * cce
+            ob += mult * cob
+            for k, v in ccnt.items():
+                counts[k] = counts.get(k, 0) + mult * v
+        visiting.discard(name)
+        memo[name] = (fl, cb, ce, counts, ob)
+        return memo[name]
+
+    fl, cb, ce, counts, ob = fold(entry.name)
+    n_whiles = sum(
+        1 for c in comps.values() for call in c.calls if call[1] > 1
+    )
+    return HloCost(flops=fl, coll_bytes=cb, coll_elems=ce,
+                   coll_counts=counts, hbm_proxy_bytes=ob, n_whiles=n_whiles)

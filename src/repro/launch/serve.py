@@ -1,0 +1,54 @@
+"""Serving launcher: stand up the continuous-batching engine for an arch
+(reduced config on CPU; the decode path is the one the decode_* dry-run
+cells compile at production scale).
+
+  PYTHONPATH=src python -m repro.launch.serve --arch qwen3-8b --requests 8
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import get_arch
+from repro.models import registry
+from repro.serve.engine import Request, ServeEngine
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--max-batch", type=int, default=4)
+    ap.add_argument("--max-seq", type=int, default=256)
+    ap.add_argument("--new-tokens", type=int, default=16)
+    ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = get_arch(args.arch).reduced()
+    print(f"[serve] {cfg.name} (reduced: {cfg.num_params()/1e6:.1f}M) "
+          f"slots={args.max_batch} cache={args.max_seq}")
+    bundle = registry.build(cfg)
+    params = bundle.init(jax.random.PRNGKey(args.seed))
+    eng = ServeEngine(bundle, params, max_batch=args.max_batch,
+                      max_seq=args.max_seq, seed=args.seed)
+    rng = np.random.default_rng(args.seed)
+    t0 = time.time()
+    for rid in range(args.requests):
+        prompt = rng.integers(1, cfg.vocab, rng.integers(4, 16)).tolist()
+        eng.submit(Request(rid=rid, prompt=prompt,
+                           max_new_tokens=args.new_tokens,
+                           temperature=args.temperature))
+    done = eng.run_until_drained()
+    dt = time.time() - t0
+    n_tok = sum(len(c.tokens) for c in done)
+    print(f"[serve] {len(done)} completions, {n_tok} tokens, "
+          f"{n_tok/dt:.1f} tok/s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,92 @@
+"""Training launcher.
+
+Two modes:
+* default — run a real training job on the local devices (CPU-scale here;
+  the same code path drives a TPU slice: sharding specs come from
+  ``repro.parallel.sharding`` and the loop handles checkpoint/restart,
+  faults, stragglers).
+* ``--plan-only`` — print the mesh plan the DSE planner recommends for the
+  arch at a target chip count (the paper's design-space exploration as a
+  deployment step).
+
+Examples:
+  PYTHONPATH=src python -m repro.launch.train --arch qwen3-8b --smoke --steps 20
+  PYTHONPATH=src python -m repro.launch.train --arch granite-34b --plan-only --chips 256
+"""
+
+from __future__ import annotations
+
+import argparse
+
+import jax
+
+from repro.configs import SHAPES, get_arch
+from repro.core.planner import ArchStats, plan, render_plans
+from repro.models import registry
+from repro.train.data import DataConfig
+from repro.train.loop import LoopConfig, run_with_restarts
+from repro.train.optimizer import AdamWConfig, init_state
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced() config (CPU-scale)")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train_ckpt")
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--fail-at", type=int, nargs="*", default=[])
+    ap.add_argument("--plan-only", action="store_true")
+    ap.add_argument("--chips", type=int, default=256)
+    args = ap.parse_args()
+
+    cfg = get_arch(args.arch)
+    if args.plan_only:
+        shape = SHAPES["train_4k"]
+        stats = ArchStats(
+            name=cfg.name, params=cfg.num_params(),
+            active_params=cfg.active_params(), n_layers=cfg.n_layers,
+            d_model=cfg.d_model, global_batch=shape.global_batch,
+            seq_len=shape.seq_len,
+        )
+        print(f"[train] mesh plans for {cfg.name} @ {args.chips} chips:")
+        print(render_plans(plan(stats, args.chips), top=10))
+        return
+
+    if args.smoke:
+        cfg = cfg.reduced()
+    print(f"[train] {cfg.name}: {cfg.num_params()/1e6:.1f}M params, "
+          f"{jax.device_count()} device(s)")
+    bundle = registry.build(cfg)
+    params = bundle.init(jax.random.PRNGKey(0))
+    opt_cfg = AdamWConfig(lr=args.lr, warmup_steps=max(args.steps // 20, 1),
+                          total_steps=args.steps,
+                          state_dtype=cfg.opt_state_dtype)
+    opt_state = init_state(opt_cfg, params)
+    step = jax.jit(bundle.make_train_step(opt_cfg, args.microbatches))
+
+    import jax.numpy as jnp
+
+    def train_step(p, o, batch):
+        return step(p, o, {k: jnp.asarray(v) for k, v in batch.items()})
+
+    loop_cfg = LoopConfig(
+        total_steps=args.steps, ckpt_dir=args.ckpt_dir,
+        ckpt_every=args.ckpt_every, fail_at_steps=tuple(args.fail_at),
+    )
+    data_cfg = DataConfig(vocab=cfg.vocab, seq_len=args.seq,
+                          global_batch=args.batch)
+    _, _, st = run_with_restarts(loop_cfg, data_cfg, train_step, params,
+                                 opt_state)
+    print(f"[train] finished {st.step} steps "
+          f"({st.restarts} restarts, {st.straggler_events} stragglers); "
+          f"loss {st.losses[0]:.4f} -> {st.losses[-1]:.4f}")
+
+
+if __name__ == "__main__":
+    main()

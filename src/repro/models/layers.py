@@ -1,0 +1,388 @@
+"""Shared neural layers (pure JAX, dict-pytree parameters).
+
+Conventions:
+* params are nested dicts of jnp arrays; per-layer stacks carry a leading L
+  axis and are consumed by ``lax.scan``.
+* weights live in the model dtype (bf16 by default); norms/softmax/rope run
+  in f32.
+* every init function has a matching shape so ``jax.eval_shape`` can produce
+  parameter ShapeDtypeStructs without allocating (the dry-run path).
+"""
+
+from __future__ import annotations
+
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.ops import attention as _attention
+
+# --------------------------------------------------------------------------
+# Initializers
+# --------------------------------------------------------------------------
+
+
+def dense_init(key, d_in: int, d_out: int, dtype, scale: float | None = None):
+    s = scale if scale is not None else 1.0 / math.sqrt(d_in)
+    return (jax.random.normal(key, (d_in, d_out), jnp.float32) * s).astype(dtype)
+
+
+def embed_init(key, vocab: int, d: int, dtype):
+    return (jax.random.normal(key, (vocab, d), jnp.float32) * 0.02).astype(dtype)
+
+
+# --------------------------------------------------------------------------
+# Norms
+# --------------------------------------------------------------------------
+
+
+def rms_norm(x, scale, eps: float = 1e-6):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps) * scale.astype(jnp.float32)
+    return out.astype(x.dtype)
+
+
+def layer_norm(x, scale, bias, eps: float = 1e-5):
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    out = (xf - mu) * jax.lax.rsqrt(var + eps)
+    out = out * scale.astype(jnp.float32) + bias.astype(jnp.float32)
+    return out.astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# RoPE
+# --------------------------------------------------------------------------
+
+
+def rope_freqs(head_dim: int, theta: float):
+    return 1.0 / (
+        theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim)
+    )
+
+
+def apply_rope(x, positions, theta: float = 10000.0):
+    """x: (B, H, S, D); positions: (B, S) or (S,)."""
+    d = x.shape[-1]
+    freqs = rope_freqs(d, theta)  # (D/2,)
+    if positions.ndim == 1:
+        positions = positions[None, :]
+    ang = positions[:, None, :, None].astype(jnp.float32) * freqs  # (B,1,S,D/2)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    xf = x.astype(jnp.float32)
+    x1, x2 = xf[..., ::2], xf[..., 1::2]
+    out = jnp.stack([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.reshape(x.shape).astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# Attention (projection + position + masking wrapper over the kernel/ref)
+# --------------------------------------------------------------------------
+
+
+def attn_init(key, cfg) -> dict:
+    ks = jax.random.split(key, 6)
+    hd = cfg.head_dim
+    dtype = cfg.param_dtype
+    p = {
+        "wq": dense_init(ks[0], cfg.d_model, cfg.n_heads * hd, dtype),
+        "wk": dense_init(ks[1], cfg.d_model, cfg.n_kv_heads * hd, dtype),
+        "wv": dense_init(ks[2], cfg.d_model, cfg.n_kv_heads * hd, dtype),
+        "wo": dense_init(ks[3], cfg.n_heads * hd, cfg.d_model, dtype,
+                         scale=1.0 / math.sqrt(cfg.n_heads * hd)),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((cfg.n_heads * hd,), dtype)
+        p["bk"] = jnp.zeros((cfg.n_kv_heads * hd,), dtype)
+        p["bv"] = jnp.zeros((cfg.n_kv_heads * hd,), dtype)
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.ones((hd,), dtype)
+        p["k_norm"] = jnp.ones((hd,), dtype)
+    return p
+
+
+def _split_heads(x, n_heads: int):
+    b, s, _ = x.shape
+    return x.reshape(b, s, n_heads, -1).transpose(0, 2, 1, 3)  # (B,H,S,D)
+
+
+def _merge_heads(x):
+    b, h, s, d = x.shape
+    return x.transpose(0, 2, 1, 3).reshape(b, s, h * d)
+
+
+def attn_qkv(p, x, cfg, positions):
+    q = x @ p["wq"]
+    k = x @ p["wk"]
+    v = x @ p["wv"]
+    if cfg.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = _split_heads(q, cfg.n_heads)
+    k = _split_heads(k, cfg.n_kv_heads)
+    v = _split_heads(v, cfg.n_kv_heads)
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"])
+        k = rms_norm(k, p["k_norm"])
+    if cfg.use_rope:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def attention_block(p, x, cfg, positions, *, causal=True, kv_override=None):
+    """Full-sequence attention (train/prefill). kv_override supplies
+    cross-attention K/V (already head-split, e.g. encoder states)."""
+    q, k, v = attn_qkv(p, x, cfg, positions)
+    if kv_override is not None:
+        k, v = kv_override
+    o = _attention(
+        q, k, v, causal=causal, window=cfg.sliding_window, use_pallas=False
+    )
+    return _merge_heads(o) @ p["wo"]
+
+
+def _kv_decode_spec(cfg):
+    """Decode-time KV-cache spec: heads over 'model' when they divide, else
+    *sequence*-sharded over 'model' (flash-decoding layout): scores are
+    computed on local KV chunks and only the (B,H,1,D) partial output is
+    reduced — instead of all-gathering the whole cache every layer
+    (EXPERIMENTS.md §Perf decode iterations)."""
+    from jax.sharding import PartitionSpec as P
+
+    def spec(h):
+        ep, nep = h.get("ep"), h.get("ep_size", 1) or 1
+        if not ep:
+            return None
+        if cfg.n_kv_heads % nep == 0:
+            return P(h.get("dp"), ep, None, None)
+        return P(h.get("dp"), None, ep, None)
+
+    return spec
+
+
+def decode_attention(p, x, cfg, cache_k, cache_v, pos):
+    """Single-token decode against a (B, Hkv, S, D) cache; pos: scalar index
+    of the new token. Returns (out, new_k, new_v)."""
+    from repro.parallel.hints import constrain
+
+    b = x.shape[0]
+    positions = jnp.full((b, 1), pos, jnp.int32)
+    q, k_new, v_new = attn_qkv(p, x, cfg, positions)
+    cache_k = jax.lax.dynamic_update_slice_in_dim(cache_k, k_new, pos, axis=2)
+    cache_v = jax.lax.dynamic_update_slice_in_dim(cache_v, v_new, pos, axis=2)
+    kv_spec = _kv_decode_spec(cfg)
+    cache_k = constrain(cache_k, kv_spec)
+    cache_v = constrain(cache_v, kv_spec)
+    s = cache_k.shape[2]
+    group = cfg.n_heads // cfg.n_kv_heads
+    kk = jnp.repeat(cache_k, group, axis=1) if group > 1 else cache_k
+    vv = jnp.repeat(cache_v, group, axis=1) if group > 1 else cache_v
+
+    from jax.sharding import PartitionSpec as P
+
+    def _seq_sharded(h):
+        ep, nep = h.get("ep"), h.get("ep_size", 1) or 1
+        return bool(ep) and cfg.n_kv_heads % nep != 0
+
+    # flash-decoding: when the KV cache is seq-sharded, replicate the tiny
+    # (B,H,1,D) q across the TP axis and keep the score matrix seq-sharded;
+    # otherwise the einsum's head-sharded q forces a full KV all-gather
+    q = constrain(
+        q, lambda h: P(h.get("dp"), None, None, None)
+        if _seq_sharded(h) else None
+    )
+    logits = jnp.einsum(
+        "bhqd,bhkd->bhqk", q.astype(jnp.float32), kk.astype(jnp.float32)
+    ) * (cfg.head_dim ** -0.5)
+    logits = constrain(
+        logits, lambda h: P(h.get("dp"), None, None, h["ep"])
+        if _seq_sharded(h) else None
+    )
+    idx = jnp.arange(s)
+    valid = idx <= pos
+    if cfg.sliding_window > 0:
+        valid &= idx > pos - cfg.sliding_window
+    logits = jnp.where(valid[None, None, None, :], logits, -1e30)
+    pr = jax.nn.softmax(logits, axis=-1)
+    o = jnp.einsum("bhqk,bhkd->bhqd", pr, vv.astype(jnp.float32)).astype(x.dtype)
+    return _merge_heads(o) @ p["wo"], cache_k, cache_v
+
+
+# --------------------------------------------------------------------------
+# MLPs
+# --------------------------------------------------------------------------
+
+
+def mlp_init(key, cfg, d_ff: int | None = None) -> dict:
+    d_ff = d_ff or cfg.d_ff
+    ks = jax.random.split(key, 3)
+    dtype = cfg.param_dtype
+    if cfg.activation == "swiglu":
+        return {
+            "w_gate": dense_init(ks[0], cfg.d_model, d_ff, dtype),
+            "w_up": dense_init(ks[1], cfg.d_model, d_ff, dtype),
+            "w_down": dense_init(ks[2], d_ff, cfg.d_model, dtype,
+                                 scale=1.0 / math.sqrt(d_ff)),
+        }
+    return {
+        "w_up": dense_init(ks[0], cfg.d_model, d_ff, dtype),
+        "w_down": dense_init(ks[1], d_ff, cfg.d_model, dtype,
+                             scale=1.0 / math.sqrt(d_ff)),
+    }
+
+
+def mlp_apply(p, x, cfg):
+    if cfg.activation == "swiglu":
+        return (jax.nn.silu(x @ p["w_gate"]) * (x @ p["w_up"])) @ p["w_down"]
+    h = x @ p["w_up"]
+    if cfg.activation == "squared_relu":
+        h = jnp.square(jax.nn.relu(h))
+    else:  # gelu
+        h = jax.nn.gelu(h)
+    return h @ p["w_down"]
+
+
+# --------------------------------------------------------------------------
+# Mixture of Experts (capacity-based scatter dispatch, EP-shardable)
+# --------------------------------------------------------------------------
+
+
+def moe_init(key, cfg) -> dict:
+    m = cfg.moe
+    ks = jax.random.split(key, 5)
+    dtype = cfg.param_dtype
+    e, d, f = m.n_experts, cfg.d_model, m.d_ff
+    p = {
+        "router": dense_init(ks[0], d, e, jnp.float32, scale=0.02),
+        "w_gate": (jax.random.normal(ks[1], (e, d, f), jnp.float32)
+                   / math.sqrt(d)).astype(dtype),
+        "w_up": (jax.random.normal(ks[2], (e, d, f), jnp.float32)
+                 / math.sqrt(d)).astype(dtype),
+        "w_down": (jax.random.normal(ks[3], (e, f, d), jnp.float32)
+                   / math.sqrt(f)).astype(dtype),
+    }
+    if m.n_shared:
+        p["shared"] = mlp_init(ks[4], cfg, d_ff=m.d_ff * m.n_shared)
+    return p
+
+
+def moe_apply(p, x, cfg):
+    """Token-choice top-k MoE with capacity; two-stage block-local dispatch.
+
+    Tokens are processed in ``S`` dp-aligned blocks (S = number of
+    data-parallel shards from the ambient sharding hints, 1 when unmeshed).
+    Stage 1 scatters each block's tokens into its OWN capacity buffer --
+    purely shard-local work. Stage 2 reshards the (S, E, C_loc, d) buffer
+    from block-sharded (dp on dim 0) to expert-sharded ('model' on dim 1):
+    an axis-aligned transition GSPMD can lower as all-to-all instead of
+    replicating token activations across the model axis (EXPERIMENTS.md
+    SS Perf, kimi iterations)."""
+    from jax.sharding import PartitionSpec as P
+
+    from repro.parallel.hints import constrain, hint
+
+    m = cfg.moe
+    b, s, d = x.shape
+    n = b * s
+    nblk = hint("dp_size", 1) or 1
+    if n % nblk:
+        nblk = 1
+    n_loc = n // nblk
+    xt = x.reshape(n, d)
+    logits = (xt.astype(jnp.float32) @ p["router"])  # (N, E)
+    gates, idx = jax.lax.top_k(jax.nn.softmax(logits, -1), m.top_k)  # (N,K)
+    gates = gates / jnp.maximum(gates.sum(-1, keepdims=True), 1e-9)
+
+    cap = int(max(m.top_k, m.capacity_factor * n_loc * m.top_k / m.n_experts))
+
+    # ---- explicit all-to-all dispatch (shard_map), via the 'a2a' hint -----
+    a2a_mesh = hint("a2a")
+    if (
+        a2a_mesh is not None
+        and hint("ep")
+        and m.n_experts % (hint("ep_size", 1) or 1) == 0
+        # tokens split over dp AND ep axes inside the dispatch
+        and n % max((hint("dp_size", 1) or 1) * (hint("ep_size", 1) or 1), 1)
+        == 0
+    ):
+        from repro.parallel.moe_ep import moe_ep_apply
+
+        out = moe_ep_apply(
+            xt, idx, gates, p["w_gate"], p["w_up"], p["w_down"],
+            mesh=a2a_mesh, dp_axes=hint("dp"), ep_axis=hint("ep"),
+            fsdp_axes=hint("fsdp"), capacity_factor=m.capacity_factor,
+            top_k=m.top_k, n_experts=m.n_experts,
+        )
+        if m.n_shared:
+            out = out + mlp_apply(p["shared"], xt, cfg)
+        return out.reshape(b, s, d)
+
+    # ---- stage 1: block-local capacity scatter ----------------------------
+    xb = xt.reshape(nblk, n_loc, d)
+    eb = idx.reshape(nblk, n_loc * m.top_k)
+    onehot = jax.nn.one_hot(eb, m.n_experts, dtype=jnp.int32)
+    pos = (jnp.cumsum(onehot, axis=1) * onehot).sum(-1) - 1  # (S, NK_loc)
+    keep = pos < cap
+    srcb = jnp.repeat(xb, m.top_k, axis=1)  # (S, NK_loc, d)
+
+    def scatter_block(buf0, fe, ps, kp, src):
+        return buf0.at[
+            jnp.where(kp, fe, 0), jnp.where(kp, ps, cap - 1)
+        ].add(jnp.where(kp[:, None], src, 0), mode="drop")
+
+    buf = jax.vmap(scatter_block)(
+        jnp.zeros((nblk, m.n_experts, cap, d), x.dtype), eb, pos, keep, srcb
+    )  # (S, E, C_loc, d)
+    blk_spec = lambda h: (
+        P(h.get("dp"), None, None, None) if h.get("dp") else None
+    )
+    # expert stage keeps dim0 (blocks) dp-sharded: the blk->ep transition
+    # then only moves dim1 (experts) across 'model' — a pure all-to-all
+    ep_spec = lambda h: (
+        P(h.get("dp"), h["ep"], None, None)
+        if h.get("ep") and m.n_experts % h.get("ep_size", 1) == 0
+        else None
+    )
+    buf = constrain(buf, blk_spec)
+
+    # ---- stage 2: expert-sharded compute (dp->ep reshard, all-to-all-able)
+    buf = constrain(buf, ep_spec)
+    hh = jnp.einsum("secd,edf->secf", buf, p["w_gate"])
+    uu = jnp.einsum("secd,edf->secf", buf, p["w_up"])
+    y = jnp.einsum("secf,efd->secd", jax.nn.silu(hh) * uu, p["w_down"])
+    y = constrain(y, ep_spec)
+
+    # ---- return trip + combine ---------------------------------------------
+    y = constrain(y, blk_spec)
+
+    def gather_block(yb, fe, ps):
+        return yb[fe, jnp.clip(ps, 0, cap - 1)]
+
+    gathered = jax.vmap(gather_block)(y, eb, pos)  # (S, NK_loc, d)
+    gathered = jnp.where(keep[..., None], gathered, 0)
+    out = (
+        gathered.reshape(n, m.top_k, d)
+        * gates[..., None].astype(x.dtype)
+    ).sum(1)
+    if m.n_shared:
+        out = out + mlp_apply(p["shared"], xt, cfg)
+    return out.reshape(b, s, d)
+
+
+# --------------------------------------------------------------------------
+# Losses
+# --------------------------------------------------------------------------
+
+
+def cross_entropy(logits, labels, ignore_index: int = -100):
+    """logits: (..., V) f32/bf16; labels int32. Mean over non-ignored."""
+    lf = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(lf, axis=-1)
+    ll = jnp.take_along_axis(lf, labels[..., None].clip(0), axis=-1)[..., 0]
+    nll = lse - ll
+    mask = (labels != ignore_index).astype(jnp.float32)
+    return (nll * mask).sum() / jnp.maximum(mask.sum(), 1.0)

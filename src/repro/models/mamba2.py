@@ -1,0 +1,200 @@
+"""Mamba2 (SSD) block in pure JAX: chunked parallel scan for training /
+prefill, O(1)-state recurrent step for decode.
+
+Chunked SSD (Dao & Gu 2024): within a chunk of length Q the output is a
+masked quadratic form (the "matrix transformer" view); across chunks a
+(heads, P, N) state carries the recurrence:
+
+  h_t = exp(dt_t * A) h_{t-1} + dt_t * (B_t  (x)  x_t)
+  y_t = C_t . h_t + D * x_t
+
+All cumulative products run in log space (dA <= 0, numerically safe).
+"""
+
+from __future__ import annotations
+
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .layers import dense_init, rms_norm
+
+
+def mamba2_init(cfg, key) -> dict:
+    s = cfg.ssm
+    d_in = s.expand * cfg.d_model
+    n_heads = d_in // s.head_dim
+    conv_ch = d_in + 2 * s.n_groups * s.state
+    ks = jax.random.split(key, 4)
+    dtype = cfg.param_dtype
+    return {
+        "in_proj": dense_init(
+            ks[0], cfg.d_model,
+            2 * d_in + 2 * s.n_groups * s.state + n_heads, dtype,
+        ),
+        "conv_w": (jax.random.normal(ks[1], (s.conv, conv_ch), jnp.float32)
+                   / math.sqrt(s.conv)).astype(dtype),
+        "conv_b": jnp.zeros((conv_ch,), dtype),
+        "A_log": jnp.zeros((n_heads,), jnp.float32),
+        "D": jnp.ones((n_heads,), jnp.float32),
+        "dt_bias": jnp.zeros((n_heads,), jnp.float32),
+        "norm": jnp.ones((d_in,), dtype),
+        "out_proj": dense_init(ks[2], d_in, cfg.d_model, dtype,
+                               scale=1.0 / math.sqrt(d_in)),
+    }
+
+
+def _causal_conv(x, w, b):
+    """Depthwise causal conv: x (B,S,C), w (K,C) -> (B,S,C)."""
+    k = w.shape[0]
+    out = x * w[k - 1]
+    for j in range(1, k):
+        pad = jnp.zeros_like(x[:, :j])
+        out = out + jnp.concatenate([pad, x[:, :-j]], axis=1) * w[k - 1 - j]
+    return out + b
+
+
+def _split_zxbcdt(p, cfg, zxbcdt):
+    s = cfg.ssm
+    d_in = s.expand * cfg.d_model
+    gn = s.n_groups * s.state
+    z = zxbcdt[..., :d_in]
+    xbc = zxbcdt[..., d_in:d_in + d_in + 2 * gn]
+    dt = zxbcdt[..., -(d_in // s.head_dim):]
+    return z, xbc, dt
+
+
+def _ssd_chunked(xh, dt, dA, Bm, Cm, s, h0=None):
+    """Chunked SSD.
+
+    xh: (B,S,H,P) inputs; dt: (B,S,H); dA: (B,S,H) = dt*A (<=0)
+    Bm/Cm: (B,S,G,N); state h0: (B,H,P,N) or None.
+    Returns y (B,S,H,P), h_final.
+    """
+    b, S, H, P = xh.shape
+    G, N = Bm.shape[2], Bm.shape[3]
+    Q = min(s.chunk, S)
+    if S % Q:
+        raise ValueError(f"seq {S} must tile by chunk {Q}")
+    nc = S // Q
+    rep = H // G
+
+    def to_chunks(a):
+        return a.reshape((b, nc, Q) + a.shape[2:])
+
+    xh, dt, dA, Bm, Cm = map(to_chunks, (xh, dt, dA, Bm, Cm))
+    # broadcast groups to heads
+    Bh = jnp.repeat(Bm, rep, axis=3) if rep > 1 else Bm  # (b,nc,Q,H,N)
+    Ch = jnp.repeat(Cm, rep, axis=3) if rep > 1 else Cm
+
+    cum = jnp.cumsum(dA, axis=2)  # (b,nc,Q,H)
+    # intra-chunk attention-like term: att[t,s] = exp(cum_t - cum_s), t>=s
+    diff = cum[:, :, :, None, :] - cum[:, :, None, :, :]  # (b,nc,t,s,H)
+    tri = jnp.tril(jnp.ones((Q, Q), bool))
+    att = jnp.where(tri[None, None, :, :, None], jnp.exp(diff), 0.0)
+    # scores_{t,s} = (C_t . B_s) att u_s  with u_s = dt_s x_s
+    cb = jnp.einsum("bcthn,bcshn->bctsh", Ch, Bh)  # (b,nc,t,s,H)
+    u = xh * dt[..., None]  # (b,nc,Q,H,P)
+    y_intra = jnp.einsum("bctsh,bcshp->bcthp", cb * att, u)
+
+    # cross-chunk: scan the state
+    decay_out = jnp.exp(cum[:, :, -1:, :] - cum)  # (b,nc,Q,H)
+    chunk_state = jnp.einsum("bcshn,bcshp->bchpn", Bh * decay_out[..., None], u)
+    chunk_gain = jnp.exp(cum[:, :, -1, :])  # (b,nc,H)
+
+    def scan_body(h, c):
+        st, g = c
+        h_new = h * g[:, :, None, None] + st
+        return h_new, h
+
+    h_init = (
+        h0 if h0 is not None else jnp.zeros((b, H, P, N), jnp.float32)
+    )
+    h_final, h_prevs = jax.lax.scan(
+        scan_body,
+        h_init,
+        (chunk_state.transpose(1, 0, 2, 3, 4), chunk_gain.transpose(1, 0, 2)),
+    )
+    h_prevs = h_prevs.transpose(1, 0, 2, 3, 4)  # (b,nc,H,P,N)
+    y_inter = jnp.einsum(
+        "bcthn,bchpn->bcthp", Ch * jnp.exp(cum)[..., None], h_prevs
+    )
+    y = (y_intra + y_inter).reshape(b, S, H, P)
+    return y, h_final
+
+
+def mamba2_apply(p, x, cfg, state=None):
+    """Train/prefill path. x: (B,S,d_model) -> (B,S,d_model)."""
+    s = cfg.ssm
+    d_in = s.expand * cfg.d_model
+    H = d_in // s.head_dim
+    zxbcdt = x @ p["in_proj"]
+    z, xbc, dt = _split_zxbcdt(p, cfg, zxbcdt)
+    xbc = jax.nn.silu(_causal_conv(xbc, p["conv_w"], p["conv_b"]))
+    gn = s.n_groups * s.state
+    xs = xbc[..., :d_in]
+    Bm = xbc[..., d_in:d_in + gn]
+    Cm = xbc[..., d_in + gn:]
+    b, S, _ = x.shape
+    xh = xs.reshape(b, S, H, s.head_dim).astype(jnp.float32)
+    Bm = Bm.reshape(b, S, s.n_groups, s.state).astype(jnp.float32)
+    Cm = Cm.reshape(b, S, s.n_groups, s.state).astype(jnp.float32)
+    dtf = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])  # (B,S,H)
+    A = -jnp.exp(p["A_log"])  # (H,)
+    dA = dtf * A
+    y, _ = _ssd_chunked(xh, dtf, dA, Bm, Cm, s)
+    y = y + p["D"][None, None, :, None] * xh
+    y = y.reshape(b, S, d_in).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z), p["norm"])
+    return y @ p["out_proj"]
+
+
+# ---------------------------- decode ----------------------------
+
+
+def mamba2_state_init(cfg, batch: int):
+    s = cfg.ssm
+    d_in = s.expand * cfg.d_model
+    H = d_in // s.head_dim
+    conv_ch = d_in + 2 * s.n_groups * s.state
+    return {
+        "h": jnp.zeros((batch, H, s.head_dim, s.state), jnp.float32),
+        "conv": jnp.zeros((batch, s.conv - 1, conv_ch), cfg.param_dtype),
+    }
+
+
+def mamba2_decode(p, x, cfg, state):
+    """x: (B,1,d_model), recurrent state update -> (y, new_state)."""
+    s = cfg.ssm
+    d_in = s.expand * cfg.d_model
+    H = d_in // s.head_dim
+    zxbcdt = x @ p["in_proj"]
+    z, xbc, dt = _split_zxbcdt(p, cfg, zxbcdt)
+    # conv over the rolling buffer
+    hist = jnp.concatenate([state["conv"], xbc], axis=1)  # (B, conv, C)
+    w = p["conv_w"]
+    conv_out = jnp.einsum("bkc,kc->bc", hist.astype(jnp.float32),
+                          w.astype(jnp.float32)) + p["conv_b"].astype(jnp.float32)
+    xbc1 = jax.nn.silu(conv_out)[:, None, :].astype(x.dtype)
+    new_conv = hist[:, 1:]
+    gn = s.n_groups * s.state
+    xs = xbc1[..., :d_in]
+    Bm = xbc1[..., d_in:d_in + gn]
+    Cm = xbc1[..., d_in + gn:]
+    b = x.shape[0]
+    xh = xs.reshape(b, H, s.head_dim).astype(jnp.float32)
+    Bm = Bm.reshape(b, s.n_groups, s.state).astype(jnp.float32)
+    Cm = Cm.reshape(b, s.n_groups, s.state).astype(jnp.float32)
+    rep = H // s.n_groups
+    Bh = jnp.repeat(Bm, rep, axis=1) if rep > 1 else Bm  # (b,H,N)
+    Ch = jnp.repeat(Cm, rep, axis=1) if rep > 1 else Cm
+    dtf = jax.nn.softplus(dt[:, 0].astype(jnp.float32) + p["dt_bias"])  # (B,H)
+    alpha = jnp.exp(dtf * -jnp.exp(p["A_log"]))  # (B,H)
+    u = xh * dtf[..., None]  # (b,H,P)
+    h = state["h"] * alpha[..., None, None] + jnp.einsum("bhp,bhn->bhpn", u, Bh)
+    y = jnp.einsum("bhpn,bhn->bhp", h, Ch) + p["D"][None, :, None] * xh
+    y = y.reshape(b, 1, d_in).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z), p["norm"])
+    return y @ p["out_proj"], {"h": h, "conv": new_conv}

@@ -1,0 +1,337 @@
+"""Architecture registry: config -> (init, loss, prefill, decode,
+input_specs) bundles consumed by the launcher, dry-run, and tests.
+
+Every function here is shape-driven and safe under ``jax.eval_shape`` — the
+dry-run never materializes full-size parameters.
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from functools import partial
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, ShapeConfig
+from repro.train.optimizer import AdamWConfig, apply_updates, init_state
+
+from . import transformer as tfm
+from . import xlstm as xl
+from . import zamba2 as zb
+from .layers import cross_entropy
+
+
+# --------------------------------------------------------------------------
+# xLSTM model assembly (heterogeneous block list)
+# --------------------------------------------------------------------------
+
+
+def _xlstm_pattern(cfg) -> tuple:
+    if cfg.block_pattern:
+        pat = list(cfg.block_pattern)
+        if len(pat) < cfg.n_layers:  # tile the declared pattern
+            pat = (pat * cfg.n_layers)[: cfg.n_layers]
+        return tuple(pat)
+    # default xLSTM[7:1]-style: one sLSTM every 6th block
+    return tuple(
+        "slstm" if (i % 6 == 5) else "mlstm" for i in range(cfg.n_layers)
+    )
+
+
+def xlstm_init(cfg, key):
+    pat = _xlstm_pattern(cfg)
+    keys = jax.random.split(key, cfg.n_layers + 2)
+    blocks = []
+    for i, kind in enumerate(pat):
+        blocks.append(
+            xl.mlstm_init(cfg, keys[i]) if kind == "mlstm"
+            else xl.slstm_init(cfg, keys[i])
+        )
+    p = {
+        "embed": (jax.random.normal(keys[-2], (cfg.vocab, cfg.d_model),
+                                    jnp.float32) * 0.02).astype(cfg.param_dtype),
+        "blocks": blocks,
+        "ln_f": jnp.ones((cfg.d_model,), cfg.param_dtype),
+    }
+    if not cfg.tie_embeddings:
+        from .layers import dense_init
+
+        p["lm_head"] = dense_init(keys[-1], cfg.d_model, cfg.vocab,
+                                  cfg.param_dtype)
+    return p
+
+
+def xlstm_forward(params, cfg, tokens, embeds=None):
+    pat = _xlstm_pattern(cfg)
+    x = params["embed"][tokens]
+    for bp, kind in zip(params["blocks"], pat):
+        x = (xl.mlstm_block_apply(bp, x, cfg) if kind == "mlstm"
+             else xl.slstm_block_apply(bp, x, cfg))
+    x = xl.rms_norm(x, params["ln_f"])
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    return x @ head
+
+
+def xlstm_cache_init(cfg, batch: int, seq: int):
+    pat = _xlstm_pattern(cfg)
+    return [
+        xl.mlstm_state_init(cfg, batch) if k == "mlstm"
+        else xl.slstm_state_init(cfg, batch)
+        for k in pat
+    ]
+
+
+def xlstm_decode(params, cfg, token, cache, pos):
+    pat = _xlstm_pattern(cfg)
+    x = params["embed"][token]
+    new_cache = []
+    for bp, st, kind in zip(params["blocks"], cache, pat):
+        if kind == "mlstm":
+            x, st2 = xl.mlstm_block_decode(bp, x, cfg, st)
+        else:
+            x, st2 = xl.slstm_block_decode(bp, x, cfg, st)
+        new_cache.append(st2)
+    x = xl.rms_norm(x, params["ln_f"])
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    return x @ head, new_cache
+
+
+# --------------------------------------------------------------------------
+# Model bundle
+# --------------------------------------------------------------------------
+
+
+@dataclass
+class ModelBundle:
+    cfg: ArchConfig
+    init: Callable  # key -> params
+    loss: Callable  # (params, batch) -> scalar
+    forward: Callable  # (params, batch) -> logits
+    cache_init: Callable | None  # (batch, seq) -> cache
+    decode: Callable | None  # (params, token, cache, pos, [aux]) -> (logits, cache)
+
+    # ---- step factories ---------------------------------------------------
+    def make_train_step(self, opt_cfg: AdamWConfig, num_microbatches: int = 1,
+                        dp_axes=None):
+        """num_microbatches > 1: gradient accumulation via lax.scan over
+        batch splits — bounds peak activation/logit memory (the (B,S,V)
+        logits of a 1M-token global batch never materialize at once).
+
+        ``dp_axes``: mesh axes carrying the batch dim. The reshaped
+        (microbatch, batch/mb, ...) array is explicitly constrained to keep
+        dim 1 on those axes — otherwise GSPMD is free to shard the
+        *microbatch* axis across data devices, which serializes the scan
+        into cross-device dynamic slices."""
+
+        def train_step(params, opt_state, batch):
+            if num_microbatches == 1:
+                loss, grads = jax.value_and_grad(self.loss)(params, batch)
+            else:
+                from jax.sharding import PartitionSpec as P
+
+                def split(x):
+                    b = x.shape[0]
+                    if b % num_microbatches:
+                        raise ValueError(
+                            f"batch {b} % microbatches {num_microbatches}"
+                        )
+                    y = x.reshape(
+                        (num_microbatches, b // num_microbatches) + x.shape[1:]
+                    )
+                    if dp_axes is not None:
+                        spec = P(None, dp_axes, *([None] * (y.ndim - 2)))
+                        y = jax.lax.with_sharding_constraint(y, spec)
+                    return y
+
+                micro = {k: split(v) for k, v in batch.items()}
+                g0 = jax.tree_util.tree_map(
+                    lambda p: jnp.zeros(p.shape, jnp.float32), params
+                )
+
+                def body(carry, mb):
+                    loss_acc, g_acc = carry
+                    loss, grads = jax.value_and_grad(self.loss)(params, mb)
+                    g_acc = jax.tree_util.tree_map(
+                        lambda a, g: a + g.astype(jnp.float32), g_acc, grads
+                    )
+                    return (loss_acc + loss, g_acc), None
+
+                (loss, grads), _ = jax.lax.scan(
+                    body, (jnp.zeros((), jnp.float32), g0), micro
+                )
+                loss = loss / num_microbatches
+                grads = jax.tree_util.tree_map(
+                    lambda g: g / num_microbatches, grads
+                )
+            params, opt_state, metrics = apply_updates(
+                opt_cfg, params, grads, opt_state
+            )
+            metrics["loss"] = loss
+            return params, opt_state, metrics
+
+        return train_step
+
+    def make_prefill_step(self):
+        def prefill_step(params, batch):
+            logits = self.forward(params, batch)
+            return logits[:, -1]  # next-token logits
+
+        return prefill_step
+
+    def make_decode_step(self):
+        def decode_step(params, token, cache, pos, aux=None):
+            if aux is not None:
+                return self.decode(params, token, cache, pos, aux)
+            return self.decode(params, token, cache, pos)
+
+        return decode_step
+
+
+def build(cfg: ArchConfig) -> ModelBundle:
+    fam = cfg.family
+    if fam in ("dense", "moe", "vlm"):
+        def loss(params, batch):
+            return tfm.lm_loss(params, cfg, batch)
+
+        def fwd(params, batch):
+            logits = tfm.forward(params, cfg, batch["tokens"],
+                                 batch.get("embeds"))
+            return logits
+
+        return ModelBundle(
+            cfg=cfg,
+            init=lambda key: tfm.init_params(cfg, key),
+            loss=loss,
+            forward=fwd,
+            cache_init=lambda b, s: tfm.init_cache(cfg, b, s),
+            decode=lambda params, tok, cache, pos: tfm.decode_step(
+                params, cfg, tok, cache, pos
+            ),
+        )
+    if fam == "audio":
+        def loss(params, batch):
+            return tfm.lm_loss(params, cfg, batch)
+
+        def fwd(params, batch):
+            return tfm.forward_enc_dec(params, cfg, batch["frames"],
+                                       batch["tokens"])
+
+        def dec(params, tok, cache, pos, enc_states=None):
+            return tfm.decode_step_enc_dec(params, cfg, tok, cache, pos,
+                                           enc_states)
+
+        return ModelBundle(
+            cfg=cfg,
+            init=lambda key: tfm.init_params(cfg, key),
+            loss=loss,
+            forward=fwd,
+            # self-cache of length s; cross K/V cache over 4*s encoder frames
+            cache_init=lambda b, s: tfm.init_cache(cfg, b, s, enc_len=4 * s),
+            decode=dec,
+        )
+    if fam == "hybrid":
+        def loss(params, batch):
+            logits = zb.forward(params, cfg, batch["tokens"])
+            return cross_entropy(logits, batch["labels"])
+
+        return ModelBundle(
+            cfg=cfg,
+            init=lambda key: zb.init_params(cfg, key),
+            loss=loss,
+            forward=lambda params, batch: zb.forward(
+                params, cfg, batch["tokens"]
+            ),
+            cache_init=lambda b, s: zb.init_cache(cfg, b, s),
+            decode=lambda params, tok, cache, pos: zb.decode_step(
+                params, cfg, tok, cache, pos
+            ),
+        )
+    if fam == "ssm":
+        def loss(params, batch):
+            logits = xlstm_forward(params, cfg, batch["tokens"])
+            return cross_entropy(logits, batch["labels"])
+
+        return ModelBundle(
+            cfg=cfg,
+            init=lambda key: xlstm_init(cfg, key),
+            loss=loss,
+            forward=lambda params, batch: xlstm_forward(
+                params, cfg, batch["tokens"]
+            ),
+            cache_init=lambda b, s: xlstm_cache_init(cfg, b, s),
+            decode=lambda params, tok, cache, pos: xlstm_decode(
+                params, cfg, tok, cache, pos
+            ),
+        )
+    raise ValueError(f"unknown family {fam!r}")
+
+
+# --------------------------------------------------------------------------
+# Input specs (ShapeDtypeStructs for the dry-run; concrete arrays for tests)
+# --------------------------------------------------------------------------
+
+
+def _tok_spec(b, s):
+    return jax.ShapeDtypeStruct((b, s), jnp.int32)
+
+
+def input_specs(cfg: ArchConfig, shape: ShapeConfig) -> dict:
+    """ShapeDtypeStruct stand-ins for every model input of this cell."""
+    b, s = shape.global_batch, shape.seq_len
+    dt = cfg.param_dtype
+    if shape.kind == "train":
+        if cfg.family == "audio":
+            return {
+                "frames": jax.ShapeDtypeStruct((b, s, cfg.d_model), dt),
+                "tokens": _tok_spec(b, s // 4),
+                "labels": _tok_spec(b, s // 4),
+            }
+        if cfg.family == "vlm":
+            nf = cfg.n_frontend_tokens
+            return {
+                "embeds": jax.ShapeDtypeStruct((b, nf, cfg.d_model), dt),
+                "tokens": _tok_spec(b, s - nf),
+                "labels": _tok_spec(b, s - nf),
+            }
+        return {"tokens": _tok_spec(b, s), "labels": _tok_spec(b, s)}
+    if shape.kind == "prefill":
+        if cfg.family == "audio":
+            return {
+                "frames": jax.ShapeDtypeStruct((b, s, cfg.d_model), dt),
+                "tokens": _tok_spec(b, s // 4),
+            }
+        if cfg.family == "vlm":
+            nf = cfg.n_frontend_tokens
+            return {
+                "embeds": jax.ShapeDtypeStruct((b, nf, cfg.d_model), dt),
+                "tokens": _tok_spec(b, s - nf),
+            }
+        return {"tokens": _tok_spec(b, s)}
+    # decode: one new token against a seq_len-deep cache (audio: the cross
+    # K/V lives in the cache, primed once at prefill — no per-token input)
+    return {"token": _tok_spec(b, 1),
+            "pos": jax.ShapeDtypeStruct((), jnp.int32)}
+
+
+def make_batch(cfg: ArchConfig, shape: ShapeConfig, seed: int = 0) -> dict:
+    """Concrete random batch matching input_specs (smoke tests, examples)."""
+    import numpy as np
+
+    rng = np.random.default_rng(seed)
+    out = {}
+    for k, v in input_specs(cfg, shape).items():
+        if v.dtype == jnp.int32:
+            if k == "pos":
+                out[k] = jnp.asarray(shape.seq_len // 2, jnp.int32)
+            else:
+                out[k] = jnp.asarray(
+                    rng.integers(0, cfg.vocab, v.shape), jnp.int32
+                )
+        else:
+            out[k] = jnp.asarray(
+                rng.standard_normal(v.shape).astype(np.float32), v.dtype
+            )
+    return out

@@ -1,0 +1,283 @@
+"""xLSTM blocks in pure JAX: chunked-parallel mLSTM (matrix memory) and
+recurrent sLSTM (scalar memory), per Beck et al. 2024.
+
+mLSTM state:  C (B,H,dk,dv), n (B,H,dk), m (B,H)   [exp-gate stabilizer]
+  C_t = f_t C_{t-1} + i_t k_t v_t^T ;  n_t = f_t n_{t-1} + i_t k_t
+  h_t = (q_t C_t) / max(|q_t n_t|, exp(-m_t))
+Training/prefill runs chunkwise (log-space gate cumsums + carried state),
+decode runs the recurrence directly.
+
+sLSTM is a strict recurrence (scan over time) with per-head recurrent
+weights — the paper's architecture choice that resists parallelization.
+"""
+
+from __future__ import annotations
+
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .layers import dense_init, rms_norm
+
+# --------------------------------------------------------------------------
+# mLSTM
+# --------------------------------------------------------------------------
+
+
+def mlstm_init(cfg, key) -> dict:
+    d = cfg.d_model
+    d_in = 2 * d
+    H = cfg.n_heads
+    ks = jax.random.split(key, 7)
+    dtype = cfg.param_dtype
+    return {
+        "ln": jnp.ones((d,), dtype),
+        "w_in": dense_init(ks[0], d, 2 * d_in, dtype),
+        "conv_w": (jax.random.normal(ks[1], (4, d_in), jnp.float32) * 0.5)
+        .astype(dtype),
+        "conv_b": jnp.zeros((d_in,), dtype),
+        "wq": dense_init(ks[2], d_in, d_in, dtype),
+        "wk": dense_init(ks[3], d_in, d_in, dtype),
+        "wv": dense_init(ks[4], d_in, d_in, dtype),
+        "w_if": dense_init(ks[5], d_in, 2 * H, dtype, scale=0.02),
+        "norm": jnp.ones((d_in,), dtype),
+        "w_down": dense_init(ks[6], d_in, d, dtype,
+                             scale=1.0 / math.sqrt(d_in)),
+    }
+
+
+def _conv4(x, w, b):
+    out = x * w[3]
+    for j in range(1, 4):
+        pad = jnp.zeros_like(x[:, :j])
+        out = out + jnp.concatenate([pad, x[:, :-j]], axis=1) * w[3 - j]
+    return out + b
+
+
+def _mlstm_chunked(q, k, v, i_raw, f_raw, chunk: int, state=None):
+    """q/k/v: (B,S,H,D) f32; i_raw/f_raw: (B,S,H). Returns (h, state)."""
+    b, S, H, D = q.shape
+    Q = min(chunk, S)
+    if S % Q:
+        raise ValueError(f"seq {S} must tile by chunk {Q}")
+    nc = S // Q
+    scale = D ** -0.5
+
+    ch = lambda a: a.reshape((b, nc, Q) + a.shape[2:])
+    q, k, v, i_raw, f_raw = map(ch, (q, k, v, i_raw, f_raw))
+    logf = jax.nn.log_sigmoid(f_raw)  # (b,nc,Q,H)
+    cumf = jnp.cumsum(logf, axis=2)  # inclusive
+
+    # intra-chunk logD[t,s] = cumf_t - cumf_s + i_s  (s <= t)
+    diff = cumf[:, :, :, None, :] - cumf[:, :, None, :, :]
+    logD = diff + i_raw[:, :, None, :, :]  # (b,nc,t,s,H)
+    tri = jnp.tril(jnp.ones((Q, Q), bool))[None, None, :, :, None]
+    logD = jnp.where(tri, logD, -jnp.inf)
+    m_intra = jnp.max(logD, axis=3)  # (b,nc,t,H)
+
+    if state is None:
+        C0 = jnp.zeros((b, H, D, D), jnp.float32)
+        n0 = jnp.zeros((b, H, D), jnp.float32)
+        m0 = jnp.full((b, H), -jnp.inf, jnp.float32)
+    else:
+        C0, n0, m0 = state["C"], state["n"], state["m"]
+
+    def scan_chunk(carry, c):
+        C, n, m_run = carry
+        (qc, kc, vc, cumf_c, logD_c, m_intra_c, i_c) = c
+        # stabilizer per position: vs carried state decayed to t
+        m_inter = cumf_c + m_run[:, None, :]  # (b,Q,H)
+        m_t = jnp.maximum(m_intra_c, m_inter)
+        m_t = jnp.maximum(m_t, -1e30)  # keep finite
+        w_intra = jnp.exp(logD_c - m_t[:, :, None, :])  # (b,t,s,H)
+        w_inter = jnp.exp(m_inter - m_t)  # (b,t,H)
+        qk = jnp.einsum("btHd,bsHd->btsH", qc, kc) * scale
+        num = (
+            jnp.einsum("btsH,btsH,bsHd->btHd", qk, w_intra, vc)
+            + jnp.einsum("btHk,bHkd->btHd", qc * w_inter[..., None], C)
+            * scale
+        )
+        den = (
+            jnp.einsum("btsH,btsH->btH", qk, w_intra)
+            + jnp.einsum("btHk,bHk->btH", qc * w_inter[..., None], n) * scale
+        )
+        h = num / jnp.maximum(jnp.abs(den), jnp.exp(-m_t))[..., None]
+
+        # chunk-end state update
+        f_all = cumf_c[:, -1]  # (b,H)
+        m_new = jnp.maximum(
+            f_all + m_run,
+            jnp.max(f_all[:, None, :] - cumf_c + i_c, axis=1),
+        )
+        decay_s = jnp.exp(f_all[:, None, :] - cumf_c + i_c - m_new[:, None, :])
+        C = (
+            C * jnp.exp(f_all + m_run - m_new)[..., None, None]
+            + jnp.einsum("bsH,bsHk,bsHd->bHkd", decay_s, kc, vc)
+        )
+        n = (
+            n * jnp.exp(f_all + m_run - m_new)[..., None]
+            + jnp.einsum("bsH,bsHk->bHk", decay_s, kc)
+        )
+        return (C, n, m_new), h
+
+    xs = (
+        q.transpose(1, 0, 2, 3, 4),
+        k.transpose(1, 0, 2, 3, 4),
+        v.transpose(1, 0, 2, 3, 4),
+        cumf.transpose(1, 0, 2, 3),
+        logD.transpose(1, 0, 2, 3, 4),
+        m_intra.transpose(1, 0, 2, 3),
+        i_raw.transpose(1, 0, 2, 3),
+    )
+    (C, n, m_run), hs = jax.lax.scan(scan_chunk, (C0, n0, m0), xs)
+    h = hs.transpose(1, 0, 2, 3, 4).reshape(b, S, H, D)
+    return h, {"C": C, "n": n, "m": m_run}
+
+
+def mlstm_block_apply(p, x, cfg, state=None, return_state: bool = False):
+    d = cfg.d_model
+    d_in = 2 * d
+    H = cfg.n_heads
+    D = d_in // H
+    h_in = rms_norm(x, p["ln"])
+    xp = h_in @ p["w_in"]
+    xm, z = xp[..., :d_in], xp[..., d_in:]
+    xc = jax.nn.silu(_conv4(xm, p["conv_w"], p["conv_b"]))
+    b, S, _ = x.shape
+    q = (xc @ p["wq"]).reshape(b, S, H, D).astype(jnp.float32)
+    k = (xc @ p["wk"]).reshape(b, S, H, D).astype(jnp.float32)
+    v = (xm @ p["wv"]).reshape(b, S, H, D).astype(jnp.float32)
+    if_g = (xc @ p["w_if"]).astype(jnp.float32)
+    i_raw, f_raw = if_g[..., :H], if_g[..., H:]
+    hh, new_state = _mlstm_chunked(q, k, v, i_raw, f_raw, cfg.ssm.chunk, state)
+    hh = hh.reshape(b, S, d_in).astype(x.dtype)
+    out = rms_norm(hh, p["norm"]) * jax.nn.silu(z)
+    out = x + out @ p["w_down"]
+    return (out, new_state) if return_state else out
+
+
+def mlstm_state_init(cfg, batch: int):
+    d_in = 2 * cfg.d_model
+    H = cfg.n_heads
+    D = d_in // H
+    return {
+        "C": jnp.zeros((batch, H, D, D), jnp.float32),
+        "n": jnp.zeros((batch, H, D), jnp.float32),
+        "m": jnp.full((batch, H), -jnp.inf, jnp.float32),
+        "conv": jnp.zeros((batch, 3, d_in), cfg.param_dtype),
+    }
+
+
+def mlstm_block_decode(p, x, cfg, state):
+    """x: (B,1,d). Recurrent mLSTM step."""
+    d = cfg.d_model
+    d_in = 2 * d
+    H = cfg.n_heads
+    D = d_in // H
+    h_in = rms_norm(x, p["ln"])
+    xp = h_in @ p["w_in"]
+    xm, z = xp[..., :d_in], xp[..., d_in:]
+    hist = jnp.concatenate([state["conv"], xm], axis=1)  # (B,4,d_in)
+    xc = jax.nn.silu(
+        jnp.einsum("bkc,kc->bc", hist.astype(jnp.float32),
+                   p["conv_w"].astype(jnp.float32))
+        + p["conv_b"].astype(jnp.float32)
+    )[:, None].astype(x.dtype)
+    b = x.shape[0]
+    q = (xc @ p["wq"]).reshape(b, H, D).astype(jnp.float32)
+    k = (xc @ p["wk"]).reshape(b, H, D).astype(jnp.float32)
+    v = (xm @ p["wv"]).reshape(b, H, D).astype(jnp.float32)
+    if_g = (xc @ p["w_if"]).astype(jnp.float32)[:, 0]
+    i_raw, f_raw = if_g[..., :H], if_g[..., H:]
+    logf = jax.nn.log_sigmoid(f_raw)
+    m_new = jnp.maximum(logf + state["m"], i_raw)
+    i_s = jnp.exp(i_raw - m_new)
+    f_s = jnp.exp(logf + state["m"] - m_new)
+    C = state["C"] * f_s[..., None, None] + jnp.einsum(
+        "bHk,bHd->bHkd", i_s[..., None] * k, v
+    )
+    n = state["n"] * f_s[..., None] + i_s[..., None] * k
+    scale = D ** -0.5
+    num = jnp.einsum("bHk,bHkd->bHd", q, C) * scale
+    den = jnp.einsum("bHk,bHk->bH", q, n) * scale
+    h = num / jnp.maximum(jnp.abs(den), jnp.exp(-m_new))[..., None]
+    hh = h.reshape(b, 1, d_in).astype(x.dtype)
+    out = rms_norm(hh, p["norm"]) * jax.nn.silu(z)
+    new_state = {"C": C, "n": n, "m": m_new, "conv": hist[:, 1:]}
+    return x + out @ p["w_down"], new_state
+
+
+# --------------------------------------------------------------------------
+# sLSTM
+# --------------------------------------------------------------------------
+
+
+def slstm_init(cfg, key) -> dict:
+    d = cfg.d_model
+    H = cfg.n_heads
+    dh = d // H
+    ks = jax.random.split(key, 3)
+    dtype = cfg.param_dtype
+    return {
+        "ln": jnp.ones((d,), dtype),
+        "w_zifo": dense_init(ks[0], d, 4 * d, dtype),
+        "r_zifo": (jax.random.normal(ks[1], (H, dh, 4 * dh), jnp.float32)
+                   / math.sqrt(dh)).astype(dtype),
+        "w_out": dense_init(ks[2], d, d, dtype),
+    }
+
+
+def slstm_state_init(cfg, batch: int):
+    d = cfg.d_model
+    return {
+        "c": jnp.zeros((batch, d), jnp.float32),
+        "n": jnp.ones((batch, d), jnp.float32),
+        "m": jnp.zeros((batch, d), jnp.float32),
+        "h": jnp.zeros((batch, d), jnp.float32),
+    }
+
+
+def _slstm_cell(p, cfg, zifo_x, state):
+    """zifo_x: (B, 4d) pre-activations from the input path."""
+    H, d = cfg.n_heads, cfg.d_model
+    dh = d // H
+    b = zifo_x.shape[0]
+    h_prev = state["h"].reshape(b, H, dh)
+    rec = jnp.einsum(
+        "bHk,Hkf->bHf", h_prev, p["r_zifo"].astype(jnp.float32)
+    ).reshape(b, 4 * d)
+    zifo = zifo_x + rec
+    zr, ir, fr, orr = jnp.split(zifo, 4, axis=-1)
+    m_new = jnp.maximum(fr + state["m"], ir)
+    i_g = jnp.exp(ir - m_new)
+    f_g = jnp.exp(fr + state["m"] - m_new)
+    c = f_g * state["c"] + i_g * jnp.tanh(zr)
+    n = f_g * state["n"] + i_g
+    h = jax.nn.sigmoid(orr) * c / jnp.maximum(n, 1e-6)
+    return {"c": c, "n": n, "m": m_new, "h": h}
+
+
+def slstm_block_apply(p, x, cfg, state=None, return_state: bool = False):
+    b, S, d = x.shape
+    h_in = rms_norm(x, p["ln"])
+    zifo_x = (h_in @ p["w_zifo"]).astype(jnp.float32)  # (B,S,4d)
+    st = state or slstm_state_init(cfg, b)
+
+    def body(carry, zx):
+        new = _slstm_cell(p, cfg, zx, carry)
+        return new, new["h"]
+
+    st_new, hs = jax.lax.scan(body, st, zifo_x.transpose(1, 0, 2))
+    hs = hs.transpose(1, 0, 2).astype(x.dtype)  # (B,S,d)
+    out = x + hs @ p["w_out"]
+    return (out, st_new) if return_state else out
+
+
+def slstm_block_decode(p, x, cfg, state):
+    h_in = rms_norm(x, p["ln"])
+    zifo_x = (h_in[:, 0] @ p["w_zifo"]).astype(jnp.float32)
+    new = _slstm_cell(p, cfg, zifo_x, state)
+    out = x + new["h"][:, None].astype(x.dtype) @ p["w_out"]
+    return out, new

@@ -1,0 +1,163 @@
+"""Zamba2-style hybrid: a Mamba2 backbone with a single *shared* (weight-
+tied) attention+MLP block applied every ``attn_period`` SSM layers.
+
+The shared block is the architecture's signature (one set of transformer
+weights reused at every site, giving attention quality at SSM cost). Each
+application site gets its own KV cache at decode time even though weights
+are shared. Per-site LoRA deltas from the released model are omitted
+(DESIGN.md §Arch-notes).
+
+Layer schedule for n_layers=81, attn_period=6:
+  13 groups of [6 x mamba2 -> shared-attn-block] + 3 trailing mamba2 layers.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .layers import mlp_apply, rms_norm
+from .mamba2 import (
+    mamba2_apply,
+    mamba2_decode,
+    mamba2_init,
+    mamba2_state_init,
+)
+from .transformer import _init_layer, _layer_apply
+from .layers import decode_attention, mlp_init, attn_init
+
+
+def schedule(cfg) -> tuple[int, int, int]:
+    """-> (n_groups, group_len, n_tail)."""
+    g = cfg.attn_period
+    n_groups = cfg.n_layers // g
+    return n_groups, g, cfg.n_layers - n_groups * g
+
+
+def init_params(cfg, key) -> dict:
+    n_groups, g, tail = schedule(cfg)
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    mk = jax.random.split(k1, cfg.n_layers)
+    mamba = jax.vmap(lambda k: mamba2_init(cfg, k))(mk)
+    p = {
+        "embed": (jax.random.normal(k3, (cfg.vocab, cfg.d_model), jnp.float32)
+                  * 0.02).astype(cfg.param_dtype),
+        "mamba_layers": mamba,  # stacked (n_layers, ...)
+        "shared_attn": _init_layer(cfg, k2, moe=False),  # ONE shared block
+        "ln_f": jnp.ones((cfg.d_model,), cfg.param_dtype),
+    }
+    if not cfg.tie_embeddings:
+        from .layers import dense_init
+
+        p["lm_head"] = dense_init(k4, cfg.d_model, cfg.vocab, cfg.param_dtype)
+    return p
+
+
+def _take(stacked, lo: int, n: int):
+    return jax.tree_util.tree_map(lambda a: a[lo:lo + n], stacked)
+
+
+def forward(params, cfg, tokens, embeds=None):
+    n_groups, g, tail = schedule(cfg)
+    x = params["embed"][tokens]
+    b, s, _ = x.shape
+    positions = jnp.arange(s, dtype=jnp.int32)[None, :]
+    shared = params["shared_attn"]
+
+    def group_body(carry, group_params):
+        xc = carry
+
+        def mamba_body(xi, lp):
+            return xi + mamba2_apply(lp, xi, cfg), None
+
+        xc, _ = jax.lax.scan(mamba_body, xc, group_params)
+        xc = _layer_apply(shared, xc, cfg, positions, causal=True, moe=False)
+        return xc, None
+
+    grouped = jax.tree_util.tree_map(
+        lambda a: a[: n_groups * g].reshape((n_groups, g) + a.shape[1:]),
+        params["mamba_layers"],
+    )
+    body = jax.checkpoint(
+        group_body, policy=jax.checkpoint_policies.nothing_saveable
+    )
+    x, _ = jax.lax.scan(body, x, grouped)
+    if tail:
+        tail_params = _take(params["mamba_layers"], n_groups * g, tail)
+
+        def tail_body(xc, lp):
+            return xc + mamba2_apply(lp, xc, cfg), None
+
+        x, _ = jax.lax.scan(jax.checkpoint(tail_body), x, tail_params)
+    x = rms_norm(x, params["ln_f"])
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    return x @ head
+
+
+def init_cache(cfg, batch: int, seq: int) -> dict:
+    n_groups, _, _ = schedule(cfg)
+    hd = cfg.head_dim
+    return {
+        "ssm": jax.vmap(lambda _: mamba2_state_init(cfg, batch))(
+            jnp.arange(cfg.n_layers)
+        ),
+        "k": jnp.zeros((n_groups, batch, cfg.n_kv_heads, seq, hd),
+                       cfg.param_dtype),
+        "v": jnp.zeros((n_groups, batch, cfg.n_kv_heads, seq, hd),
+                       cfg.param_dtype),
+    }
+
+
+def decode_step(params, cfg, token, cache, pos):
+    n_groups, g, tail = schedule(cfg)
+    x = params["embed"][token]
+    shared = params["shared_attn"]
+    grouped_ssm = jax.tree_util.tree_map(
+        lambda a: a[: n_groups * g].reshape((n_groups, g) + a.shape[1:]),
+        cache["ssm"],
+    )
+    grouped_params = jax.tree_util.tree_map(
+        lambda a: a[: n_groups * g].reshape((n_groups, g) + a.shape[1:]),
+        params["mamba_layers"],
+    )
+
+    def group_body(carry, scanned):
+        xc = carry
+        gp, gs, ck, cv = scanned
+
+        def mamba_body(xi, sc):
+            lp, st = sc
+            y, st2 = mamba2_decode(lp, xi, cfg, st)
+            return xi + y, st2
+
+        xc, gs2 = jax.lax.scan(mamba_body, xc, (gp, gs))
+        h = rms_norm(xc, shared["ln1"])
+        o, ck, cv = decode_attention(shared["attn"], h, cfg, ck, cv, pos)
+        xc = xc + o
+        xc = xc + mlp_apply(shared["mlp"], rms_norm(xc, shared["ln2"]), cfg)
+        return xc, (gs2, ck, cv)
+
+    x, (new_ssm_g, nk, nv) = jax.lax.scan(
+        group_body, x, (grouped_params, grouped_ssm, cache["k"], cache["v"])
+    )
+    new_ssm = jax.tree_util.tree_map(
+        lambda a: a.reshape((n_groups * g,) + a.shape[2:]), new_ssm_g
+    )
+    if tail:
+        tail_params = _take(params["mamba_layers"], n_groups * g, tail)
+        tail_ssm = jax.tree_util.tree_map(
+            lambda a: a[n_groups * g:], cache["ssm"]
+        )
+
+        def tail_body(xc, sc):
+            lp, st = sc
+            y, st2 = mamba2_decode(lp, xc, cfg, st)
+            return xc + y, st2
+
+        x, tail_ssm2 = jax.lax.scan(tail_body, x, (tail_params, tail_ssm))
+        new_ssm = jax.tree_util.tree_map(
+            lambda a, t: jnp.concatenate([a, t], 0), new_ssm, tail_ssm2
+        )
+    x = rms_norm(x, params["ln_f"])
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    return x @ head, {"ssm": new_ssm, "k": nk, "v": nv}

@@ -1,0 +1,64 @@
+"""Ambient sharding hints for model-internal with_sharding_constraint.
+
+Model code (e.g. the MoE dispatch) sometimes needs explicit activation
+shardings — GSPMD's default choice for scatter/gather patterns is
+involuntary replication. But model code must also run un-meshed (CPU smoke
+tests). This tiny layer provides thread-local hints: the launcher traces
+step functions inside ``sharding_hints(ep='model', dp=('data',))`` and
+model code calls ``constrain(x, lambda ep, dp: P(ep, None, None))`` which
+is a no-op when no hints are active.
+"""
+
+from __future__ import annotations
+
+import threading
+from contextlib import contextmanager
+from typing import Callable
+
+import jax
+
+_TLS = threading.local()
+
+
+def _current() -> dict | None:
+    return getattr(_TLS, "hints", None)
+
+
+@contextmanager
+def sharding_hints(**kw):
+    prev = _current()
+    _TLS.hints = kw
+    try:
+        yield
+    finally:
+        _TLS.hints = prev
+
+
+def hints_active() -> bool:
+    return _current() is not None
+
+
+def hint(name: str, default=None):
+    h = _current()
+    return h.get(name, default) if h else default
+
+
+def constrain(x, spec_fn: Callable[[dict], "jax.sharding.PartitionSpec"]):
+    """Apply with_sharding_constraint(spec_fn(hints)) when hints are active."""
+    h = _current()
+    if not h:
+        return x
+    spec = spec_fn(h)
+    if spec is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, spec)
+
+
+def with_hints(fn, **kw):
+    """Wrap fn so the hints are active while it is traced."""
+
+    def wrapped(*args, **kwargs):
+        with sharding_hints(**kw):
+            return fn(*args, **kwargs)
+
+    return wrapped

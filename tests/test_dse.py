@@ -1,0 +1,189 @@
+"""DSE model validation against the paper's own measurements (Table III)."""
+
+import numpy as np
+import pytest
+
+from repro.core.dse import (
+    DesignPoint,
+    FPGAModel,
+    FPGATarget,
+    StreamWorkload,
+    TABLE3_MEASURED,
+    TPUModel,
+    TPUTarget,
+)
+from repro.core.planner import ArchStats, evaluate_plan, plan
+
+# The paper's LBM pipeline: 131 FP ops (70 add / 60 mul / 1 div), 10-word
+# stream each way (9 distributions + attribute), depth 855, 720x300 grid.
+LBM_W = StreamWorkload(
+    name="lbm-x1",
+    flops_per_elem=131,
+    words_in=10,
+    words_out=10,
+    depth=855,
+    buffer_bits=573_370 - 80_000,  # PE buffer (BRAM minus pipeline FIFOs)
+    elems=720 * 300,
+    grid_w=720,
+)
+LBM_CENSUS = {"add": 70, "mul": 60, "div": 1}
+
+
+@pytest.fixture(scope="module")
+def model():
+    return FPGAModel()
+
+
+@pytest.mark.parametrize("nm", sorted(TABLE3_MEASURED))
+def test_table3_sustained_performance(model, nm):
+    """Sustained GFlop/s must match the paper's Table III within 1%."""
+    n, m = nm
+    meas = TABLE3_MEASURED[nm]
+    pt = model.evaluate(LBM_W, n, m, LBM_CENSUS)
+    assert pt.sustained_gflops == pytest.approx(meas[5], rel=0.01)
+
+
+@pytest.mark.parametrize("nm", sorted(TABLE3_MEASURED))
+def test_table3_utilization(model, nm):
+    n, m = nm
+    meas = TABLE3_MEASURED[nm]
+    pt = model.evaluate(LBM_W, n, m, LBM_CENSUS)
+    assert pt.utilization == pytest.approx(meas[4], abs=0.005)
+
+
+@pytest.mark.parametrize("nm", sorted(TABLE3_MEASURED))
+def test_table3_dsps_exact(model, nm):
+    n, m = nm
+    meas = TABLE3_MEASURED[nm]
+    pt = model.evaluate(LBM_W, n, m, LBM_CENSUS)
+    assert pt.detail["dsps"] == meas[3]
+
+
+@pytest.mark.parametrize("nm", sorted(TABLE3_MEASURED))
+def test_table3_alms_within_20pct(model, nm):
+    n, m = nm
+    meas = TABLE3_MEASURED[nm]
+    pt = model.evaluate(LBM_W, n, m, LBM_CENSUS)
+    # core ALMs = total - SoC share; model should land within 20%
+    assert pt.detail["alms"] - model.target.soc_alms == pytest.approx(
+        meas[0], rel=0.20
+    )
+
+
+def test_table3_power_fit(model):
+    """The fitted power model explains the six measurements well."""
+    assert model.power_r2 > 0.95
+    for (n, m), meas in TABLE3_MEASURED.items():
+        w = model.power_w(n, m, meas[5])
+        assert w == pytest.approx(meas[6], rel=0.06)
+
+
+def test_peak_is_eq10(model):
+    # Eq. (10): P = n*m*131*0.18 GFlop/s; (1,4) -> 94.32
+    pt = model.evaluate(LBM_W, 1, 4, LBM_CENSUS)
+    assert pt.peak_gflops == pytest.approx(94.32, rel=1e-6)
+
+
+def test_best_config_is_1_4(model):
+    """The paper's headline: (n,m)=(1,4) wins on perf and perf/W."""
+    pts = model.explore(LBM_W, census=LBM_CENSUS)
+    feasible = [p for p in pts if p.feasible]
+    best = max(feasible, key=lambda p: p.perf_per_watt)
+    assert best.key() == (1, 4)
+    assert best.perf_per_watt == pytest.approx(2.416, rel=0.03)
+    best_perf = max(feasible, key=lambda p: p.sustained_gflops)
+    assert best_perf.key() == (1, 4)
+    assert best_perf.sustained_gflops == pytest.approx(94.2, rel=0.01)
+
+
+def test_nm8_infeasible_on_dsps(model):
+    """nm=8 would need 384 DSPs > 256 — matches the paper stopping at nm=4."""
+    for n, m in [(1, 8), (2, 4), (8, 1), (4, 2)]:
+        pt = model.evaluate(LBM_W, n, m, LBM_CENSUS)
+        assert not pt.feasible and any("DSP" in l for l in pt.limits)
+
+
+def test_bandwidth_bound_only_when_n_gt_1(model):
+    for n, m in [(1, 1), (1, 4)]:
+        assert "bandwidth-bound" not in model.evaluate(LBM_W, n, m).limits
+    for n, m in [(2, 1), (4, 1)]:
+        assert "bandwidth-bound" in model.evaluate(LBM_W, n, m).limits
+
+
+def test_short_stream_pipeline_penalty(model):
+    """Non-overlapped short streams suffer the prologue/epilogue loss."""
+    short = StreamWorkload(
+        name="short", flops_per_elem=131, words_in=10, words_out=10,
+        depth=855, buffer_bits=100_000, elems=2_000, grid_w=100,
+    )
+    u1 = model.evaluate(short, 1, 1, overlapped_passes=False).utilization
+    u8 = model.evaluate(short, 1, 8, overlapped_passes=False).utilization
+    assert u8 < u1 < 1.0
+    assert u8 == pytest.approx(2_000 / (2_000 + 8 * 855), rel=1e-6)
+
+
+# ----------------------- TPU model -----------------------
+
+
+def test_tpu_temporal_blocking_raises_intensity():
+    m1 = TPUModel().evaluate(LBM_W, bh=64, m=1)
+    m8 = TPUModel().evaluate(LBM_W, bh=64, m=8)
+    ai1 = m1.detail["arithmetic_intensity"]
+    ai8 = m8.detail["arithmetic_intensity"]
+    assert ai8 == pytest.approx(8 * ai1, rel=1e-6)
+    # memory-bound at m=1; more sustained at m=8
+    assert "memory-bound" in m1.limits
+    assert m8.sustained_gflops > 2 * m1.sustained_gflops
+
+
+def test_tpu_vmem_constraint():
+    pts = TPUModel().explore(LBM_W, bh_values=(4096,), m_values=(64,))
+    assert not pts[0].feasible
+    assert any("VMEM" in l for l in pts[0].limits)
+
+
+def test_tpu_best_point_is_compute_bound():
+    best = TPUModel().explore(LBM_W)[0]
+    assert best.feasible
+    assert "compute-bound" in best.limits
+    # and reaches a solid fraction of the VPU roof
+    assert best.utilization > 0.5
+
+
+# ----------------------- planner -----------------------
+
+GRANITE = ArchStats(
+    name="granite-34b", params=34e9, active_params=34e9, n_layers=88,
+    d_model=6144, global_batch=256, seq_len=4096,
+)
+
+
+def test_planner_enumerates_factorizations():
+    plans = plan(GRANITE, 256)
+    assert {p.chips for p in plans} == {256}
+    keys = {(p.dp, p.tp, p.pp) for p in plans}
+    assert (16, 16, 1) in keys and (256, 1, 1) in keys
+
+
+def test_planner_pure_dp_infeasible_for_34b():
+    """34B params + adam states don't fit a 16GiB chip without sharding."""
+    p = evaluate_plan(GRANITE, 256, 1, 1)
+    assert not p.feasible  # weights alone = 68GB/chip
+
+
+def test_planner_bubble_matches_formula():
+    p = evaluate_plan(GRANITE, 8, 4, 8, microbatches=16)
+    assert p.pipeline_util == pytest.approx(16 / (16 + 7))
+
+
+def test_planner_dp_is_bandwidth_spatial():
+    """More dp -> more gradient all-reduce time (the paper's spatial cost)."""
+    t2 = evaluate_plan(GRANITE, 2, 16, 8).t_dp_allreduce
+    t8 = evaluate_plan(GRANITE, 8, 16, 2).t_dp_allreduce
+    assert t8 > t2 > 0
+
+
+def test_planner_best_is_feasible_and_sane():
+    best = plan(GRANITE, 256)[0]
+    assert best.feasible
+    assert best.tp >= 2 or best.pp >= 2  # pure-DP can't fit

@@ -1,0 +1,163 @@
+"""Pallas kernels (interpret mode) vs pure-jnp oracles, swept over
+shapes / dtypes / fusion depths / block sizes."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.apps import lbm
+from repro.kernels.flash_attention.ops import (
+    attention,
+    attention_chunked_ref,
+    attention_ref,
+    flash_attention,
+)
+from repro.kernels.lbm_stream.ops import (
+    lbm_multistep,
+    lbm_multistep_ref,
+    lbm_run_blocked,
+)
+
+# ------------------------- lbm_stream -------------------------
+
+
+@pytest.mark.parametrize("m,block_h", [(1, 8), (2, 8), (4, 16), (8, 8)])
+@pytest.mark.parametrize("hw", [(32, 128), (16, 256)])
+def test_lbm_kernel_matches_ref(m, block_h, hw):
+    h, w = hw
+    f, attr, _ = lbm.taylor_green_init(h, w)
+    got = lbm_multistep(f, attr, 1 / 0.8, 0.0, m=m, block_h=block_h)
+    want = lbm_multistep_ref(f, attr, 1 / 0.8, 0.0, m=m)
+    np.testing.assert_allclose(
+        np.asarray(got), np.asarray(want), rtol=2e-5, atol=1e-7
+    )
+
+
+def test_lbm_kernel_walls_and_lid():
+    f, attr = lbm.couette_init(24, 128)
+    got = lbm_multistep(f, attr, 1 / 0.9, 0.07, m=4, block_h=8)
+    want = lbm_multistep_ref(f, attr, 1 / 0.9, 0.07, m=4)
+    np.testing.assert_allclose(
+        np.asarray(got), np.asarray(want), rtol=2e-5, atol=1e-7
+    )
+
+
+def test_lbm_kernel_multi_launch_equals_sequential():
+    f, attr, _ = lbm.taylor_green_init(16, 128)
+    got = lbm_run_blocked(f, attr, 1 / 0.8, steps=8, m=4, block_h=8)
+    want = lbm_multistep_ref(f, attr, 1 / 0.8, 0.0, m=8)
+    np.testing.assert_allclose(
+        np.asarray(got), np.asarray(want), rtol=2e-5, atol=1e-6
+    )
+
+
+def test_lbm_kernel_block_independence():
+    """Result must not depend on the spatial block decomposition."""
+    f, attr, _ = lbm.taylor_green_init(32, 128)
+    a = lbm_multistep(f, attr, 1 / 0.8, 0.0, m=2, block_h=8)
+    b = lbm_multistep(f, attr, 1 / 0.8, 0.0, m=2, block_h=16)
+    c = lbm_multistep(f, attr, 1 / 0.8, 0.0, m=2, block_h=32)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(c), rtol=1e-6)
+
+
+def test_lbm_kernel_rejects_bad_blocks():
+    f, attr, _ = lbm.taylor_green_init(16, 128)
+    with pytest.raises(ValueError):
+        lbm_multistep(f, attr, 1 / 0.8, m=4, block_h=5)  # 16 % 5 != 0
+    with pytest.raises(ValueError):
+        lbm_multistep(f, attr, 1 / 0.8, m=16, block_h=8)  # m > block_h
+
+
+def test_lbm_kernel_physics_through_kernel():
+    """Taylor-Green decay through the kernel path, not just vs ref."""
+    import math
+
+    h = w = 128
+    tau = 0.8
+    f, attr, ksq = lbm.taylor_green_init(h, w, u0=0.02)
+    e0 = lbm.tgv_kinetic_energy(f)
+    f2 = lbm_run_blocked(f, attr, 1 / tau, steps=40, m=8, block_h=16)
+    e1 = lbm.tgv_kinetic_energy(f2)
+    expected = e0 * math.exp(-2.0 * lbm.viscosity(tau) * ksq * 40)
+    assert e1 == pytest.approx(expected, rel=0.02)
+
+
+# ------------------------- flash_attention -------------------------
+
+
+def _qkv(rng, b, hq, hkv, sq, sk, d, dtype):
+    q = jnp.asarray(rng.standard_normal((b, hq, sq, d)).astype(dtype))
+    k = jnp.asarray(rng.standard_normal((b, hkv, sk, d)).astype(dtype))
+    v = jnp.asarray(rng.standard_normal((b, hkv, sk, d)).astype(dtype))
+    return q, k, v
+
+
+@pytest.mark.parametrize(
+    "b,hq,hkv,sq,sk,causal,window",
+    [
+        (1, 2, 2, 128, 128, True, 0),
+        (2, 4, 1, 128, 128, True, 0),  # MQA
+        (1, 4, 2, 64, 256, True, 0),  # GQA, decode-style prefix
+        (1, 2, 2, 128, 128, False, 0),  # bidirectional (encoder)
+        (1, 2, 2, 256, 256, True, 64),  # sliding window
+    ],
+)
+def test_flash_matches_direct(b, hq, hkv, sq, sk, causal, window):
+    rng = np.random.default_rng(42)
+    q, k, v = _qkv(rng, b, hq, hkv, sq, sk, 128, np.float32)
+    got = flash_attention(
+        q, k, v, causal=causal, window=window, block_q=64, block_k=64
+    )
+    want = attention_ref(q, k, v, causal=causal, window=window)
+    np.testing.assert_allclose(
+        np.asarray(got), np.asarray(want), rtol=2e-3, atol=2e-3
+    )
+
+
+@pytest.mark.parametrize("dtype", [np.float32, jnp.bfloat16])
+def test_flash_dtypes(dtype):
+    rng = np.random.default_rng(7)
+    q, k, v = _qkv(rng, 1, 2, 2, 128, 128, 128, np.float32)
+    q, k, v = (x.astype(dtype) for x in (q, k, v))
+    got = flash_attention(q, k, v, block_q=64, block_k=64)
+    want = attention_ref(q, k, v)
+    assert got.dtype == q.dtype
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32),
+        np.asarray(want, np.float32),
+        rtol=2e-2, atol=2e-2,
+    )
+
+
+@pytest.mark.parametrize("blocks", [(32, 32), (64, 128), (128, 64)])
+def test_flash_block_independence(blocks):
+    bq, bk = blocks
+    rng = np.random.default_rng(3)
+    q, k, v = _qkv(rng, 1, 2, 2, 128, 256, 128, np.float32)
+    got = flash_attention(q, k, v, block_q=bq, block_k=bk)
+    want = attention_ref(q, k, v)
+    np.testing.assert_allclose(
+        np.asarray(got), np.asarray(want), rtol=2e-3, atol=2e-3
+    )
+
+
+def test_chunked_ref_matches_direct_long():
+    rng = np.random.default_rng(5)
+    q, k, v = _qkv(rng, 1, 2, 1, 512, 512, 64, np.float32)
+    got = attention_chunked_ref(q, k, v, chunk=128)
+    want = attention_ref(q, k, v)
+    np.testing.assert_allclose(
+        np.asarray(got), np.asarray(want), rtol=2e-3, atol=2e-3
+    )
+
+
+def test_attention_dispatcher_cpu_path():
+    rng = np.random.default_rng(9)
+    q, k, v = _qkv(rng, 1, 2, 2, 128, 128, 64, np.float32)
+    got = attention(q, k, v)  # CPU backend -> chunked ref
+    want = attention_ref(q, k, v)
+    np.testing.assert_allclose(
+        np.asarray(got), np.asarray(want), rtol=2e-3, atol=2e-3
+    )

@@ -1,0 +1,151 @@
+"""LBM application: physics validation + SPD-path equivalence (paper §III)."""
+
+import math
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.apps import lbm
+from repro.core.dse import FPGAModel, StreamWorkload
+
+
+def test_collision_conserves_mass_momentum():
+    rng = np.random.default_rng(0)
+    f = jnp.asarray(
+        rng.uniform(0.01, 0.2, size=(9, 16, 16)).astype(np.float32)
+    )
+    fc = lbm.collide(f, one_tau=1.0 / 0.8)
+    rho0, ux0, uy0 = lbm.macroscopics(f)
+    rho1, ux1, uy1 = lbm.macroscopics(fc)
+    np.testing.assert_allclose(rho1, rho0, rtol=1e-5)
+    np.testing.assert_allclose(ux1, ux0, rtol=1e-4, atol=1e-6)
+    np.testing.assert_allclose(uy1, uy0, rtol=1e-4, atol=1e-6)
+
+
+def test_periodic_step_conserves_mass():
+    f, attr, _ = lbm.taylor_green_init(32, 48)
+    f2 = lbm.ref_run(f, attr, 1.0 / 0.8, steps=20)
+    np.testing.assert_allclose(
+        float(jnp.sum(f2)), float(jnp.sum(f)), rtol=1e-5
+    )
+
+
+def test_taylor_green_decay_matches_analytic():
+    """Kinetic energy decays as exp(-2 nu k^2 t) — the physics gate."""
+    h = w = 64
+    tau = 0.8
+    f, attr, ksq = lbm.taylor_green_init(h, w, u0=0.02)
+    nu = lbm.viscosity(tau)
+    e0 = lbm.tgv_kinetic_energy(f)
+    steps = 200
+    f2 = lbm.ref_run(f, attr, 1.0 / tau, steps=steps)
+    e1 = lbm.tgv_kinetic_energy(f2)
+    expected = e0 * math.exp(-2.0 * nu * ksq * steps)
+    assert e1 == pytest.approx(expected, rel=0.02)
+
+
+def test_couette_linear_profile():
+    """Steady Couette flow between a static and a moving wall is linear."""
+    h, w = 18, 8
+    u_lid = 0.05
+    f, attr = lbm.couette_init(h, w)
+    f = lbm.ref_run(f, attr, 1.0 / 0.9, steps=4000, u_lid=u_lid, mode="wrap")
+    _, ux, _ = lbm.macroscopics(f)
+    prof = np.asarray(jnp.mean(ux, axis=1))[1:-1]  # fluid rows
+    # walls sit half a cell outside the first/last fluid rows
+    y = (np.arange(1, h - 1) - 0.5) / (h - 2)
+    expected = u_lid * y
+    np.testing.assert_allclose(prof, expected, atol=2.5e-3)
+
+
+def test_cavity_smoke():
+    f, attr = lbm.cavity_init(24, 24)
+    f = lbm.ref_run(f, attr, 1.0 / 0.7, steps=300, u_lid=0.1, mode="zero")
+    rho, ux, uy = lbm.macroscopics(f)
+    assert np.isfinite(np.asarray(rho)).all()
+    # lid drags the top fluid row in +x
+    assert float(jnp.mean(ux[-2])) > 1e-3
+
+
+# ----------------- SPD path == reference -----------------
+
+
+def _spd_step(sim, f, attr):
+    return sim._jitted(f, attr)
+
+
+def test_spd_pe_equals_reference_periodic():
+    prob = lbm.LBMProblem(16, 24, tau=0.8, mode="wrap")
+    sim = lbm.LBMSimulation(prob)
+    f, attr, _ = lbm.taylor_green_init(16, 24)
+    got = _spd_step(sim, f, attr)
+    want = lbm.ref_step(f, attr, prob.one_tau, mode="wrap")
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-5,
+                               atol=1e-7)
+
+
+def test_spd_pe_equals_reference_walls():
+    prob = lbm.LBMProblem(12, 10, tau=0.9, u_lid=0.07, mode="zero")
+    sim = lbm.LBMSimulation(prob)
+    f, attr = lbm.couette_init(12, 10)
+    got, want = f, f
+    for _ in range(5):
+        got = _spd_step(sim, got, attr)
+        want = lbm.ref_step(want, attr, prob.one_tau, prob.u_lid, mode="zero")
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-5,
+                               atol=1e-7)
+
+
+def test_spd_bndry_variant_equals_hdl_variant():
+    """The SPD-described boundary stage == the fixed-function HDL node."""
+    prob = lbm.LBMProblem(10, 8, tau=0.9, u_lid=0.06, mode="zero")
+    sim_h = lbm.LBMSimulation(prob, bndry="hdl")
+    sim_s = lbm.LBMSimulation(prob, bndry="spd")
+    f, attr = lbm.couette_init(10, 8)
+    np.testing.assert_allclose(
+        np.asarray(sim_h._jitted(f, attr)),
+        np.asarray(sim_s._jitted(f, attr)),
+        rtol=2e-5, atol=1e-7,
+    )
+
+
+def test_cascade_m_equals_m_steps():
+    """Paper Figs. 10-12: m cascaded PEs == m sequential applications."""
+    prob = lbm.LBMProblem(16, 16, tau=0.8, mode="wrap")
+    sim1 = lbm.LBMSimulation(prob, m=1)
+    sim4 = lbm.LBMSimulation(prob, m=4)
+    f, attr, _ = lbm.taylor_green_init(16, 16)
+    out4 = sim4.run(f, attr, 4)
+    out1 = sim1.run(f, attr, 4)
+    np.testing.assert_allclose(
+        np.asarray(out4), np.asarray(out1), rtol=2e-5, atol=1e-7
+    )
+    # hardware model: depth and flops scale with m
+    assert sim4.hardware_report.depth == 4 * sim1.hardware_report.depth
+    assert sim4.hardware_report.flops == 4 * sim1.hardware_report.flops
+
+
+def test_collision_census_is_131_flops():
+    """The paper's Table IV: 131 FP operators per pipeline."""
+    from repro.core import Registry, parse_spd
+
+    reg = Registry()
+    calc = reg.compile(parse_spd(lbm.calc_spd()))
+    assert calc.flops == 131
+    assert calc.census["div"] == 1
+    assert calc.census["add"] + calc.census["mul"] == 130
+
+
+def test_pe_workload_feeds_dse():
+    """End-to-end: compiled PE -> StreamWorkload -> Table-III-scale numbers."""
+    prob = lbm.LBMProblem(300, 720, mode="wrap")
+    sim = lbm.LBMSimulation(prob)
+    rep = sim.hardware_report
+    w = StreamWorkload.from_report(rep, elems=720 * 300, grid_w=720)
+    assert w.flops_per_elem == 131
+    assert w.words_in == 10 and w.words_out == 10
+    pt = FPGAModel().evaluate(w, 1, 4, rep.census)
+    # the compiled PE reproduces the paper's winning configuration numbers
+    assert pt.sustained_gflops == pytest.approx(94.2, rel=0.01)
+    assert pt.feasible

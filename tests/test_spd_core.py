@@ -1,0 +1,248 @@
+"""SPD parser + compiler + transform tests (paper Figs. 3-5 examples)."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import (
+    Registry,
+    SPDCompileError,
+    SPDParseError,
+    parse_spd,
+    spatial_duplicate,
+    temporal_cascade,
+)
+from repro.core.dfg import expr_depth, expr_op_census
+from repro.core.spd import parse_formula
+
+# The paper's Fig. 4 source, verbatim in structure (Eqs. 5-9).
+FIG4 = """
+Name  core;                         # name of this core
+Main_In  {main_i::x1,x2,x3,x4};     # main stream in
+Main_Out {main_o::z1,z2};           # main stream out
+Brch_In  {brch_i::bin1};            # branch inputs
+Brch_Out {brch_o::bout1};           # branch outputs
+
+Param cnst = 123.456;               # define parameter
+EQU Node1, t1 = x1 * x2;            # eq (5) (Node1)
+EQU Node2, t2 = x3 + x4;            # eq (6) (Node2)
+EQU Node3, z1 = t1 - t2 * bin1;     # eq (7) (Node3)
+EQU Node4, z2 = t1 / t2 + cnst;     # eq (8) (Node4)
+DRCT (bout1) = (t2);                # port connection
+"""
+
+
+@pytest.fixture
+def fig4_compiled():
+    reg = Registry()
+    return reg.compile(parse_spd(FIG4))
+
+
+def _fig4_oracle(x1, x2, x3, x4, bin1):
+    t1 = x1 * x2
+    t2 = x3 + x4
+    return t1 - t2 * bin1, t1 / t2 + np.float32(123.456), t2
+
+
+def test_fig4_parse(fig4_compiled):
+    core = fig4_compiled.core
+    assert core.name == "core"
+    assert core.main_input_ports() == ["x1", "x2", "x3", "x4"]
+    assert core.main_output_ports() == ["z1", "z2"]
+    assert core.brch_input_ports() == ["bin1"]
+    assert core.brch_output_ports() == ["bout1"]
+    assert core.params["cnst"] == pytest.approx(123.456)
+    assert len(core.nodes) == 4
+
+
+def test_fig4_semantics(fig4_compiled):
+    rng = np.random.default_rng(0)
+    T = 64
+    x = {k: rng.standard_normal(T).astype(np.float32) for k in "abcd"}
+    bin1 = rng.standard_normal(T).astype(np.float32)
+    x3 = np.abs(x["c"]) + 1.0  # keep divisor away from 0
+    x4 = np.abs(x["d"]) + 1.0
+    main, brch = fig4_compiled(
+        {"x1": x["a"], "x2": x["b"], "x3": x3, "x4": x4}, {"bin1": bin1}
+    )
+    z1, z2, bout1 = _fig4_oracle(x["a"], x["b"], x3, x4, bin1)
+    np.testing.assert_allclose(main["z1"], z1, rtol=1e-6)
+    np.testing.assert_allclose(main["z2"], z2, rtol=1e-6)
+    np.testing.assert_allclose(brch["bout1"], bout1, rtol=1e-6)
+
+
+def test_fig4_hardware_report(fig4_compiled):
+    rep = fig4_compiled.hardware_report
+    # Ops: mul(N1), add(N2), sub+mul(N3), div+add(N4) = 3 add, 2 mul, 1 div
+    assert rep.census == {"add": 3, "mul": 2, "div": 1}
+    assert rep.flops == 6
+    assert rep.depth > 0
+    assert rep.stream_in_words == 4
+    assert rep.stream_out_words == 2
+
+
+def test_fig5_hierarchy():
+    """The paper's Fig. 5: three module calls + one EQU at a higher level."""
+    reg = Registry()
+    inner = reg.compile(parse_spd("""
+        Name core;
+        Main_In {main_i::a,b};
+        Main_Out {main_o::p,q};
+        EQU N1, p = a + b;
+        EQU N2, q = a * b;
+    """))
+    outer = reg.compile(parse_spd("""
+        Name Array;
+        Main_In {main_i::i1,i2,i3,i4};
+        Main_Out {main_o::o1,o2,o3};
+        HDL Node_a, 0, (t1,t2) = core(i1,i2);
+        HDL Node_b, 0, (t3,t4) = core(i3,i4);
+        HDL Node_c, 0, (o1,o2) = core(t1,t3);
+        EQU Node_d, o3 = t2 * t4;
+    """))
+    x = [jnp.arange(8, dtype=jnp.float32) + k for k in range(4)]
+    main, _ = outer({"i1": x[0], "i2": x[1], "i3": x[2], "i4": x[3]})
+    np.testing.assert_allclose(main["o1"], (x[0] + x[1]) + (x[2] + x[3]))
+    np.testing.assert_allclose(main["o2"], (x[0] + x[1]) * (x[2] + x[3]))
+    np.testing.assert_allclose(main["o3"], (x[0] * x[1]) * (x[2] * x[3]))
+    # outer depth >= inner depth twice (chained a->c) and census sums
+    assert outer.hardware_report.depth >= 2 * inner.hardware_report.depth
+    assert outer.census == {"add": 3, "mul": 4}
+
+
+def test_temporal_cascade_equals_repeated_application():
+    reg = Registry()
+    pe = reg.compile(parse_spd("""
+        Name PE;
+        Main_In {mi::u,v};
+        Main_Out {mo::u2,v2};
+        Param k = 0.5;
+        EQU N1, u2 = u + k * ( v - u );
+        EQU N2, v2 = v - k * ( v - u );
+    """))
+    casc = temporal_cascade(pe, 4)
+    rng = np.random.default_rng(1)
+    u = rng.standard_normal(32).astype(np.float32)
+    v = rng.standard_normal(32).astype(np.float32)
+    got, _ = casc({"i_u2": u, "i_v2": v} if False else dict(zip(
+        casc.core.main_input_ports(), [u, v])))
+    uu, vv = u, v
+    for _ in range(4):
+        m, _ = pe({"u": uu, "v": vv})
+        uu, vv = np.asarray(m["u2"]), np.asarray(m["v2"])
+    outs = list(got.values())
+    np.testing.assert_allclose(outs[0], uu, rtol=1e-5)
+    np.testing.assert_allclose(outs[1], vv, rtol=1e-5)
+    # depth multiplies, flops multiply (paper: m x d, m x NFlops)
+    assert casc.hardware_report.depth == 4 * pe.hardware_report.depth
+    assert casc.flops == 4 * pe.flops
+
+
+def test_spatial_duplicate_lanes():
+    reg = Registry()
+    pe = reg.compile(parse_spd("""
+        Name PE;
+        Main_In {mi::x};
+        Main_Out {mo::y};
+        EQU N1, y = x * x + 1.0;
+    """))
+    dup = spatial_duplicate(pe, 4)
+    assert len(dup.core.main_input_ports()) == 4
+    x = np.arange(16, dtype=np.float32)
+    lanes = [x[j::4] for j in range(4)]
+    main, _ = dup(dict(zip(dup.core.main_input_ports(), lanes)))
+    for j, out in enumerate(main.values()):
+        np.testing.assert_allclose(out, lanes[j] ** 2 + 1.0)
+    assert dup.flops == 4 * pe.flops
+    assert dup.hardware_report.depth == pe.hardware_report.depth
+
+
+def test_spatial_duplicate_rejects_stateful():
+    reg = Registry()
+    pe = reg.compile(parse_spd("""
+        Name PE;
+        Main_In {mi::x};
+        Main_Out {mo::y};
+        HDL D1, 0, (y) = Delay(x), 3;
+    """))
+    with pytest.raises(SPDCompileError):
+        spatial_duplicate(pe, 2)
+
+
+def test_library_modules():
+    reg = Registry()
+    c = reg.compile(parse_spd("""
+        Name LibTest;
+        Main_In {mi::x,sel,a,b};
+        Main_Out {mo::xd,xf,m,cmp};
+        HDL D1, 0, (xd) = Delay(x), 2;
+        HDL F1, 0, (xf) = StreamForward(x), 1;
+        HDL M1, 0, (m) = SyncMux(sel,a,b);
+        HDL C1, 0, (cmp) = Comparator(a,b), op=gt;
+    """))
+    x = jnp.arange(6, dtype=jnp.float32)
+    sel = jnp.array([1, 0, 1, 0, 1, 0], jnp.float32)
+    a = jnp.ones(6, jnp.float32) * 5
+    b = jnp.arange(6, dtype=jnp.float32)
+    main, _ = c({"x": x, "sel": sel, "a": a, "b": b})
+    np.testing.assert_allclose(main["xd"], [0, 0, 0, 1, 2, 3])
+    np.testing.assert_allclose(main["xf"], [1, 2, 3, 4, 5, 0])
+    np.testing.assert_allclose(main["m"], [5, 1, 5, 3, 5, 5])
+    np.testing.assert_allclose(main["cmp"], [1, 1, 1, 1, 1, 0])
+
+
+# ---------------- formula parser properties ----------------
+
+
+def test_formula_precedence():
+    e = parse_formula("a + b * c")
+    from repro.core.dfg import Bin
+
+    assert isinstance(e, Bin) and e.op == "+"
+    assert isinstance(e.rhs, Bin) and e.rhs.op == "*"
+
+
+def test_formula_errors():
+    with pytest.raises(SPDParseError):
+        parse_formula("a + ")
+    with pytest.raises(SPDParseError):
+        parse_formula("foo(a)")  # unknown function
+    with pytest.raises(SPDParseError):
+        parse_spd("Main_In {m::x};")  # missing Name
+
+
+@st.composite
+def _rand_expr(draw, depth=0):
+    if depth > 3 or draw(st.booleans()):
+        if draw(st.booleans()):
+            return draw(
+                st.sampled_from(["va", "vb", "vc"])
+            )
+        return str(draw(st.floats(0.1, 9.9).map(lambda f: round(f, 3))))
+    op = draw(st.sampled_from(["+", "-", "*", "/"]))
+    l = draw(_rand_expr(depth=depth + 1))
+    r = draw(_rand_expr(depth=depth + 1))
+    return f"( {l} {op} {r} )"
+
+
+@given(_rand_expr())
+@settings(max_examples=50, deadline=None)
+def test_formula_roundtrip_eval(src):
+    """Parsed formulae evaluate identically to Python eval."""
+    e = parse_formula(src)
+    env = {"va": np.float32(1.5), "vb": np.float32(-2.25), "vc": np.float32(3.0)}
+    try:
+        expected = eval(src, {}, dict(env))
+    except ZeroDivisionError:
+        return
+    from repro.core.compiler import eval_expr
+
+    got = eval_expr(e, {k: jnp.float32(v) for k, v in env.items()})
+    if np.isfinite(expected):
+        np.testing.assert_allclose(np.asarray(got), np.float32(expected),
+                                   rtol=2e-5, atol=1e-6)
+    # depth/census never crash and are consistent
+    assert expr_depth(e) >= 0
+    assert all(v > 0 for v in expr_op_census(e).values())
