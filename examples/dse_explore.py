@@ -1,15 +1,21 @@
-"""Design-space exploration walkthrough — the paper's workflow as a tool:
-compile an SPD workload, sweep (n, m) on the FPGA model, sweep temporal
-blocking on the TPU model, and plan LM meshes with the same trade-off.
+"""Design-space exploration walkthrough — the paper's workflow as a tool.
 
-    PYTHONPATH=src python examples/dse_explore.py --arch kimi-k2-1t-a32b
+Compile the SPD LBM core, sweep the full (n, m) lattice on the FPGA model
+and the (block_h, m) lattice on the TPU model in batched NumPy, extract
+the Pareto frontiers, execute the TPU frontier through the real Pallas
+kernel, and plan LM meshes with the same spatial/temporal trade-off:
+
+    PYTHONPATH=src python examples/dse_explore.py --arch granite-34b
+
+Use ``--no-execute`` to skip the (host-speed) interpret-mode kernel runs,
+``--topk`` to execute more frontier points.
 """
 
 import argparse
 
 from repro.apps import lbm
-from repro.configs import ARCHS, get_arch
-from repro.core.dse import FPGAModel, StreamWorkload, TPUModel, render_table
+from repro.configs import get_arch
+from repro.core.explorer import execute_frontier, render_executed
 from repro.core.planner import ArchStats, plan, render_plans
 
 
@@ -19,25 +25,52 @@ def main():
     ap.add_argument("--chips", type=int, default=256)
     ap.add_argument("--batch", type=int, default=256)
     ap.add_argument("--seq", type=int, default=4096)
+    ap.add_argument("--topk", type=int, default=2)
+    ap.add_argument("--no-execute", action="store_true",
+                    help="skip the interpret-mode Pallas runs")
     args = ap.parse_args()
 
     print("=" * 72)
     print("1) The paper's case study: LBM on the Stratix V model")
     print("=" * 72)
     sim = lbm.LBMSimulation(lbm.LBMProblem(300, 720, mode="wrap"))
-    w = StreamWorkload.from_report(sim.hardware_report, elems=720 * 300,
-                                   grid_w=720)
-    print(render_table(FPGAModel().explore(w)))
+    ex = sim.explorer()
+    sweep = ex.sweep_fpga(n_values=(1, 2, 4, 8), m_values=(1, 2, 4, 8))
+    print(sweep.table(k=10))
+    print()
+    print("Pareto frontier (max throughput, max perf/W, min resources):")
+    print(sweep.table(frontier_only=True))
+    best = sweep.best("perf_per_watt")
+    print(f"-> best configuration: (n, m) = ({best.n}, {best.m})  "
+          f"[paper §III: (1, 4)]")
 
     print()
     print("=" * 72)
     print("2) Hardware adaptation: temporal blocking on TPU v5e")
     print("=" * 72)
-    print(render_table(TPUModel().explore(w)[:8]))
+    tsweep = ex.sweep_tpu()
+    print(tsweep.table(k=8))
+    print()
+    print("TPU Pareto frontier:")
+    print(tsweep.table(frontier_only=True, k=6))
+
+    if not args.no_execute:
+        print()
+        print("=" * 72)
+        print(f"3) Model -> measurement: top-{args.topk} frontier points "
+              f"through the Pallas kernel (interpret mode, 64x128)")
+        print("=" * 72)
+        mex = lbm.LBMSimulation(lbm.LBMProblem(64, 128, mode="wrap")).explorer()
+        msweep = mex.sweep_tpu(bh_values=(8, 16, 32, 64),
+                               m_values=(1, 2, 4, 8))
+        f0, attr, _ = lbm.taylor_green_init(64, 128)
+        runs = execute_frontier(msweep, f0, attr, one_tau=1 / 0.8,
+                                k=args.topk, interpret=True)
+        print(render_executed(runs))
 
     print()
     print("=" * 72)
-    print(f"3) The same trade on an LM fleet: {args.arch} on "
+    print(f"4) The same trade on an LM fleet: {args.arch} on "
           f"{args.chips} chips")
     print("   (spatial n -> dp, temporal m -> pp, in-PE -> tp)")
     print("=" * 72)

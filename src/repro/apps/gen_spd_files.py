@@ -1,0 +1,55 @@
+"""Regenerate the on-disk .spd artifacts (paper Figs. 6-11) from the
+in-memory SPD generators in :mod:`repro.apps.lbm`.
+
+The checked-in files under ``src/repro/apps/spd/`` are what the paper
+ships as hand-written DSL sources; here they are emitted from the same
+generators the simulation uses, so the artifacts can never drift from
+the code. ``tests/test_spd_files.py`` compiles them and checks the
+structural invariants (131 FP ops, cascade depth scaling).
+
+    PYTHONPATH=src python -m repro.apps.gen_spd_files
+"""
+
+from __future__ import annotations
+
+import os
+
+from repro.core import Registry, parse_spd, temporal_cascade_spd
+
+from .lbm import bndry_spd, calc_spd, pe_spd, trans_spd
+
+# The paper's grid: 720 x 300, periodic.
+WIDTH = 720
+MODE = "wrap"
+
+SPD_DIR = os.path.join(os.path.dirname(os.path.abspath(__file__)), "spd")
+
+
+def sources() -> dict[str, str]:
+    """File name -> SPD source for every shipped artifact."""
+    pe_src = pe_spd(WIDTH, MODE, name="PEx1", bndry="hdl")
+    pe_core = parse_spd(pe_src)
+    return {
+        "ulbm_calc.spd": calc_spd(),
+        "ulbm_trans2d_x1.spd": trans_spd(WIDTH, MODE),
+        "ulbm_bndry.spd": bndry_spd(),
+        "pe_x1.spd": pe_src,
+        "pe_x1_t2.spd": temporal_cascade_spd(pe_core, 2),
+        "pe_x1_t4.spd": temporal_cascade_spd(pe_core, 4),
+    }
+
+
+def main(out_dir: str = SPD_DIR) -> list[str]:
+    os.makedirs(out_dir, exist_ok=True)
+    written = []
+    for name, src in sources().items():
+        path = os.path.join(out_dir, name)
+        with open(path, "w", encoding="utf-8") as fh:
+            fh.write(src.strip() + "\n")
+        written.append(path)
+    return written
+
+
+if __name__ == "__main__":
+    for path in main():
+        print(path)

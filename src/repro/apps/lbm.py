@@ -344,6 +344,21 @@ class LBMSimulation:
     def hardware_report(self):
         return self.pe.hardware_report
 
+    def stream_workload(self):
+        """DSE workload for this problem: T = H*W elements, W-wide rows."""
+        p = self.problem
+        return self.hardware_report.workload(
+            elems=p.height * p.width, grid_w=p.width
+        )
+
+    def explorer(self, **kw):
+        """Design-space :class:`~repro.core.explorer.Explorer` for this
+        simulation's compiled PE on this problem size."""
+        from repro.core.explorer import Explorer
+
+        return Explorer(self.stream_workload(),
+                        census=self.hardware_report.census, **kw)
+
 
 # --------------------------------------------------------------------------
 # Initial conditions + analytic references

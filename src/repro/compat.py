@@ -1,0 +1,65 @@
+"""Cross-version jax shims for APIs that moved between releases.
+
+Everything here degrades to the older spelling when the newer one is
+absent, so the same source runs on jax 0.4.x and current jax.
+"""
+
+from __future__ import annotations
+
+import jax
+
+try:  # jax >= 0.6 exposes shard_map at top level
+    shard_map = jax.shard_map
+except AttributeError:
+    import functools
+
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    @functools.wraps(_shard_map)
+    def shard_map(*args, **kwargs):
+        # newer jax renamed check_rep -> check_vma; accept the new
+        # spelling everywhere and translate for the old implementation
+        if "check_vma" in kwargs:
+            kwargs["check_rep"] = kwargs.pop("check_vma")
+        return _shard_map(*args, **kwargs)
+
+
+def pvary(x, axes):
+    """Mark ``x`` device-varying over ``axes`` inside shard_map.
+
+    Uses the varying-axis type system where jax has one
+    (``lax.pcast(..., to="varying")`` / ``lax.pvary``); on older jax the
+    replication checker is simply disabled (check_vma=False -> check_rep)
+    and the marking is a no-op.
+    """
+    pcast = getattr(jax.lax, "pcast", None)
+    if pcast is not None:
+        return pcast(x, axes, to="varying")
+    fn = getattr(jax.lax, "pvary", None)
+    if fn is not None:
+        return fn(x, axes)
+    return x
+
+
+def cost_analysis(compiled) -> dict:
+    """``compiled.cost_analysis()`` as a flat dict on any jax version
+    (older jax wraps the per-module properties dict in a one-element list)."""
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    return ca or {}
+
+
+def set_mesh(mesh):
+    """``with set_mesh(mesh): ...`` — ambient-mesh context on any jax.
+
+    Newer jax has ``jax.set_mesh``; on older versions the ``Mesh`` object
+    is itself the context manager that installs the ambient mesh.
+    """
+    fn = getattr(jax, "set_mesh", None)
+    if fn is not None:
+        return fn(mesh)
+    return mesh
+
+
+__all__ = ["cost_analysis", "pvary", "set_mesh", "shard_map"]

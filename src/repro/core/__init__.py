@@ -2,8 +2,10 @@
 compiler to JAX, (n, m) parallelism transforms, and the design-space
 exploration engine."""
 
-from .compiler import CompiledCore, Registry, SPDCompileError
+from .compiler import CompiledCore, HardwareReport, Registry, SPDCompileError
 from .dfg import Core, Node, SPDError, SPDGraphError, schedule
+from .dse import DesignPoint, FPGAModel, StreamWorkload, TPUModel
+from .explorer import Explorer, Sweep, execute_frontier, pareto_mask
 from .library import LibraryModule, default_registry_modules
 from .spd import SPDParseError, parse_spd, parse_spd_file
 from .transforms import (
@@ -16,6 +18,10 @@ from .transforms import (
 __all__ = [
     "CompiledCore",
     "Core",
+    "DesignPoint",
+    "Explorer",
+    "FPGAModel",
+    "HardwareReport",
     "LibraryModule",
     "Node",
     "Registry",
@@ -23,7 +29,12 @@ __all__ = [
     "SPDError",
     "SPDGraphError",
     "SPDParseError",
+    "StreamWorkload",
+    "Sweep",
+    "TPUModel",
     "default_registry_modules",
+    "execute_frontier",
+    "pareto_mask",
     "parse_spd",
     "parse_spd_file",
     "schedule",

@@ -130,6 +130,17 @@ class HardwareReport:
     stream_in_words: int  # main-input words per element (bandwidth model)
     stream_out_words: int
 
+    def workload(self, elems: int, grid_w: int = 0):
+        """Bind this report to a stream length -> DSE ``StreamWorkload``.
+
+        This is the compile-to-explore hand-off: everything the sweep
+        engine needs (flops, stream widths, depth, buffer bits) comes from
+        the synthesized core; only the problem size is supplied here.
+        """
+        from .dse import StreamWorkload
+
+        return StreamWorkload.from_report(self, elems=elems, grid_w=grid_w)
+
 
 class CompiledCore:
     """An SPD core compiled to a callable JAX dataflow function."""
@@ -201,6 +212,16 @@ class CompiledCore:
             stream_in_words=len(self.core.main_input_ports()),
             stream_out_words=len(self.core.main_output_ports()),
         )
+
+    def stream_workload(self, elems: int, grid_w: int = 0):
+        """Shorthand for ``hardware_report.workload(...)`` (DSE sweeps)."""
+        return self.hardware_report.workload(elems, grid_w)
+
+    def explorer(self, elems: int, grid_w: int = 0, **kw):
+        """Design-space :class:`~repro.core.explorer.Explorer` of this core."""
+        from .explorer import Explorer
+
+        return Explorer(self.hardware_report, elems=elems, grid_w=grid_w, **kw)
 
     # ---- execution -----------------------------------------------------------
 

@@ -18,6 +18,17 @@ Two targets are modeled:
 
 All numbers flow from a :class:`StreamWorkload`, which is produced directly
 from a compiled SPD core's :class:`~repro.core.compiler.HardwareReport`.
+
+Both models expose two evaluation surfaces:
+
+* ``evaluate(w, ...)`` — one scalar design point, returning a rich
+  :class:`DesignPoint` (limits, detail dict).
+* ``evaluate_batch(w, ...)`` — the same arithmetic over *arrays* of
+  coordinates, returning a dict of NumPy arrays with no per-point Python
+  loops. ``repro.core.explorer`` sweeps whole (n, m, block) lattices
+  through this path and extracts Pareto frontiers from the result
+  (DESIGN.md §5); the scalar and batched paths are asserted equal
+  point-for-point in ``tests/test_explorer.py``.
 """
 
 from __future__ import annotations
@@ -244,6 +255,71 @@ class FPGAModel:
         }
         return pt
 
+    def evaluate_batch(
+        self,
+        w: StreamWorkload,
+        n,
+        m,
+        census: dict | None = None,
+        overlapped_passes: bool = True,
+    ) -> dict[str, np.ndarray]:
+        """Vectorized :meth:`evaluate` over coordinate arrays ``n``, ``m``.
+
+        ``n`` and ``m`` are broadcast against each other; every returned
+        array has the broadcast shape. The arithmetic is bit-identical to
+        the scalar path (same float64 expressions, same clamps), so
+        ``evaluate_batch(w, [n], [m])`` agrees with ``evaluate(w, n, m)``
+        point-for-point.
+        """
+        t = self.target
+        n = np.asarray(n, dtype=np.int64)
+        m = np.asarray(m, dtype=np.int64)
+        n, m = np.broadcast_arrays(n, m)
+        nm = n * m
+
+        peak = nm * float(w.flops_per_elem) * t.freq_ghz  # Eq. (10)
+        words = max(w.words_in, w.words_out)
+        bw_per_lane = words * 4 * t.freq_ghz
+        u_bw = np.minimum(1.0, t.bw_eff_gbs / (n * bw_per_lane))
+        depth = m * w.depth
+        if overlapped_passes:
+            u_pipe = np.ones(n.shape)
+        else:
+            u_pipe = w.elems / (w.elems + depth)
+        u = u_bw * u_pipe
+        sustained = peak * u
+
+        alms = t.soc_alms + nm * self.pipeline_alms(w, census)
+        dsps = t.soc_dsps + nm * self.pipeline_dsps(census)
+        bram = t.soc_bram_bits + m * (w.buffer_bits + (n - 1) * 32 * 64)
+        feasible = (alms <= t.alms) & (dsps <= t.dsps) & (bram <= t.bram_bits)
+
+        c0, c1, c2, c3 = self.power_coef
+        bw_used = np.minimum(n * words * 4 * t.freq_ghz, t.bw_eff_gbs)
+        power = np.maximum(c0 + c1 * nm + c2 * sustained + c3 * bw_used, 20.0)
+        ppw = np.where(power > 0, sustained / power, 0.0)
+        resource_frac = np.maximum(
+            np.maximum(alms / t.alms, dsps / t.dsps), bram / t.bram_bits
+        )
+        return {
+            "n": n,
+            "m": m,
+            "feasible": feasible,
+            "peak_gflops": peak,
+            "utilization": u,
+            "sustained_gflops": sustained,
+            "power_w": power,
+            "perf_per_watt": ppw,
+            "alms": alms,
+            "dsps": dsps,
+            "bram_bits": bram,
+            "u_bw": u_bw,
+            "u_pipe": u_pipe,
+            "bw_required_gbs": n * bw_per_lane,
+            "depth": depth,
+            "resource_frac": resource_frac,
+        }
+
     def explore(
         self,
         w: StreamWorkload,
@@ -277,6 +353,12 @@ class TPUTarget:
     vmem_bytes: int = 128 * 1024 * 1024
     ici_gbs_per_link: float = 50.0
     hbm_bytes_per_chip: int = 16 * 2**30
+    # Simple per-chip power model for the perf/W frontier axis: idle floor
+    # plus activity proportional to the achieved fraction of the VPU roof.
+    # (v5e board powers are not published per-op; these assumed constants
+    # are stated in DESIGN.md §5 and only rank points, they are not claims.)
+    chip_idle_w: float = 75.0
+    chip_peak_w: float = 170.0
 
 
 class TPUModel:
@@ -337,6 +419,10 @@ class TPUModel:
         pt.peak_gflops = peak
         pt.sustained_gflops = sustained
         pt.utilization = sustained / peak if peak else 0.0
+        pt.power_w = n_chips * (
+            t.chip_idle_w + (t.chip_peak_w - t.chip_idle_w) * pt.utilization
+        )
+        pt.perf_per_watt = sustained / pt.power_w if pt.power_w > 0 else 0.0
         pt.detail = {
             "vmem_bytes": vmem,
             "t_compute_s": t_compute,
@@ -345,8 +431,75 @@ class TPUModel:
             "halo_useful_fraction": useful,
             "arithmetic_intensity": m * w.flops_per_elem / bytes_per_elem,
             "block_rows": bh,
+            "vmem_frac": vmem / t.vmem_bytes,
         }
         return pt
+
+    def evaluate_batch(
+        self,
+        w: StreamWorkload,
+        bh,
+        m,
+        n_chips=1,
+        double_buffer: bool = True,
+    ) -> dict[str, np.ndarray]:
+        """Vectorized :meth:`evaluate` over ``bh``/``m``/``n_chips`` arrays.
+
+        Coordinates broadcast against each other; returns a dict of arrays
+        in the broadcast shape, numerically identical to the scalar path.
+        """
+        t = self.target
+        bh = np.asarray(bh, dtype=np.int64)
+        m = np.asarray(m, dtype=np.int64)
+        chips = np.asarray(n_chips, dtype=np.int64)
+        bh, m, chips = np.broadcast_arrays(bh, m, chips)
+        grid_w = w.grid_w or int(math.sqrt(w.elems))
+        bytes_per_elem = 4 * (w.words_in + w.words_out)
+
+        rows = bh + 2 * m
+        vmem = rows * grid_w * w.words_in * 4 * (2 if double_buffer else 1)
+        feasible = vmem <= t.vmem_bytes
+
+        useful = bh / (bh + 2 * m)
+        flops = w.elems * w.flops_per_elem * m / useful
+        t_compute = flops / (chips * t.vpu_f32_tflops * 1e12)
+        t_memory = w.elems * bytes_per_elem / (chips * t.hbm_gbs * 1e9)
+        halo_bytes = np.where(
+            chips > 1, 2.0 * 2 * m * grid_w * w.words_in * 4, 0.0
+        )
+        t_coll = halo_bytes / (t.ici_gbs_per_link * 1e9)
+
+        step_time = np.maximum(np.maximum(t_compute, t_memory), t_coll)
+        useful_flops = w.elems * w.flops_per_elem * m
+        sustained = np.where(step_time > 0, useful_flops / step_time / 1e9, 0.0)
+        peak = chips * t.vpu_f32_tflops * 1e3
+        util = np.where(peak > 0, sustained / peak, 0.0)
+        power = chips * (t.chip_idle_w + (t.chip_peak_w - t.chip_idle_w) * util)
+        ppw = np.where(power > 0, sustained / power, 0.0)
+        bound = np.where(
+            t_compute >= np.maximum(t_memory, t_coll),
+            "compute",
+            np.where(t_memory >= t_coll, "memory", "collective"),
+        )
+        return {
+            "n": chips,
+            "m": m,
+            "block_rows": bh,
+            "feasible": feasible,
+            "peak_gflops": peak,
+            "utilization": util,
+            "sustained_gflops": sustained,
+            "power_w": power,
+            "perf_per_watt": ppw,
+            "vmem_bytes": vmem,
+            "t_compute_s": t_compute,
+            "t_memory_s": t_memory,
+            "t_collective_s": t_coll,
+            "halo_useful_fraction": useful,
+            "arithmetic_intensity": m * w.flops_per_elem / bytes_per_elem,
+            "bound": bound,
+            "resource_frac": vmem / t.vmem_bytes,
+        }
 
     def explore(
         self,
@@ -368,16 +521,26 @@ class TPUModel:
 
 
 def render_table(points: Sequence[DesignPoint]) -> str:
-    """Markdown Table-III-style rendering of design points."""
+    """Markdown Table-III-style rendering of design points.
+
+    TPU points (which carry ``block_rows`` in their detail) get an extra
+    ``bh`` column so same-(n, m) blockings stay distinguishable.
+    """
+    with_bh = any("block_rows" in p.detail for p in points)
+    bh_head, bh_rule = ("| bh ", "|----") if with_bh else ("", "")
     head = (
-        "| n | m | feasible | peak GF/s | util | sustained GF/s | W | GF/sW | limits |\n"
-        "|---|---|----------|-----------|------|----------------|---|-------|--------|"
+        f"| n | m {bh_head}| feasible | peak GF/s | util | sustained GF/s "
+        "| W | GF/sW | limits |\n"
+        f"|---|---{bh_rule}|----------|-----------|------|----------------"
+        "|---|-------|--------|"
     )
-    rows = [
-        f"| {p.n} | {p.m} | {'y' if p.feasible else 'N'} | "
-        f"{p.peak_gflops:8.1f} | {p.utilization:.3f} | "
-        f"{p.sustained_gflops:10.1f} | {p.power_w:5.1f} | "
-        f"{p.perf_per_watt:.3f} | {';'.join(p.limits)} |"
-        for p in points
-    ]
+    rows = []
+    for p in points:
+        bh_cell = f"| {p.detail.get('block_rows', '-')} " if with_bh else ""
+        rows.append(
+            f"| {p.n} | {p.m} {bh_cell}| {'y' if p.feasible else 'N'} | "
+            f"{p.peak_gflops:8.1f} | {p.utilization:.3f} | "
+            f"{p.sustained_gflops:10.1f} | {p.power_w:5.1f} | "
+            f"{p.perf_per_watt:.3f} | {';'.join(p.limits)} |"
+        )
     return "\n".join([head] + rows)

@@ -1,0 +1,378 @@
+"""Design-space explorer: batched lattice sweeps -> Pareto frontier -> run.
+
+This is the executable form of the paper's §III workflow (DESIGN.md §5).
+Where :mod:`repro.core.dse` models one (n, m) point at a time, the explorer
+
+1. enumerates the full coordinate lattice for a compiled SPD core —
+   (n, m) for the FPGA target, (block_h, m, chips) for the TPU target —
+   and evaluates every point in one batched NumPy call
+   (:meth:`FPGAModel.evaluate_batch` / :meth:`TPUModel.evaluate_batch`);
+2. extracts the Pareto frontier over (throughput, perf/W, resource use)
+   with a vectorized dominance check (:func:`pareto_mask`);
+3. for the TPU target, *executes* the top-k frontier points through the
+   real ``lbm_stream`` Pallas kernel (interpret mode off-TPU) and reports
+   predicted-vs-measured error per point (:func:`execute_frontier`).
+
+The paper's "find the best among them" result — (n, m) = (1, 4) on the
+Stratix V — falls out of ``Explorer.sweep_fpga(...).best()`` and is
+asserted in ``tests/test_explorer.py``.
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Sequence
+
+import numpy as np
+
+from .dse import (
+    DesignPoint,
+    FPGAModel,
+    StreamWorkload,
+    TPUModel,
+    render_table,
+)
+
+__all__ = [
+    "ExecutedPoint",
+    "Explorer",
+    "Sweep",
+    "execute_frontier",
+    "pareto_mask",
+]
+
+
+# --------------------------------------------------------------------------
+# Pareto frontier extraction
+# --------------------------------------------------------------------------
+
+
+def pareto_mask(objectives, maximize: Sequence[bool] | None = None) -> np.ndarray:
+    """Boolean mask of non-dominated rows of an (P, K) objective matrix.
+
+    A row i is dominated when some row j is >= on every column and > on at
+    least one (after flipping minimized columns). Fully vectorized: one
+    (P, P, K) broadcast, no per-point Python loop — fine for the few
+    thousand points a lattice sweep produces.
+    """
+    X = np.asarray(objectives, dtype=float)
+    if X.ndim == 1:
+        X = X[:, None]
+    if maximize is not None:
+        sign = np.where(np.asarray(maximize, dtype=bool), 1.0, -1.0)
+        X = X * sign
+    ge = (X[None, :, :] >= X[:, None, :]).all(axis=-1)  # ge[i, j]: j >= i
+    gt = (X[None, :, :] > X[:, None, :]).any(axis=-1)  # gt[i, j]: j > i somewhere
+    dominated = (ge & gt).any(axis=1)
+    return ~dominated
+
+
+# --------------------------------------------------------------------------
+# Sweep result
+# --------------------------------------------------------------------------
+
+#: frontier objectives: maximize throughput and perf/W, minimize resources.
+DEFAULT_OBJECTIVES = ("sustained_gflops", "perf_per_watt", "resource_frac")
+DEFAULT_MAXIMIZE = (True, True, False)
+
+
+@dataclass
+class Sweep:
+    """One batched lattice evaluation: coordinate + metric arrays.
+
+    ``data`` holds one NumPy array per metric, all flattened to the same
+    length; ``point(i)`` re-materializes index i as a full scalar
+    :class:`DesignPoint` (via the scalar model path, so limits/detail are
+    exactly what ``evaluate`` would have produced).
+    """
+
+    target: str  # 'fpga' | 'tpu'
+    workload: StreamWorkload
+    model: object
+    data: dict[str, np.ndarray]
+    census: dict | None = None
+    coord_names: tuple = field(default=())
+    scalar_kwargs: dict = field(default_factory=dict)  # extra evaluate() args
+
+    def __post_init__(self):
+        if not self.coord_names:
+            self.coord_names = (
+                ("n", "m") if self.target == "fpga" else ("block_rows", "m", "n")
+            )
+
+    def __len__(self) -> int:
+        return int(self.data["sustained_gflops"].size)
+
+    @property
+    def feasible(self) -> np.ndarray:
+        return self.data["feasible"]
+
+    def metrics(self, names: Sequence[str]) -> np.ndarray:
+        """Column-stack the named metric arrays into a (P, K) matrix."""
+        return np.column_stack([np.asarray(self.data[n], float) for n in names])
+
+    # ---- frontier ----------------------------------------------------------
+
+    def pareto_mask(
+        self,
+        objectives: Sequence[str] = DEFAULT_OBJECTIVES,
+        maximize: Sequence[bool] = DEFAULT_MAXIMIZE,
+        feasible_only: bool = True,
+    ) -> np.ndarray:
+        """Non-dominated mask over the sweep (infeasible points excluded)."""
+        mask = np.zeros(len(self), dtype=bool)
+        pool = self.feasible if feasible_only else np.ones(len(self), bool)
+        idx = np.flatnonzero(pool)
+        if idx.size == 0:
+            return mask
+        X = self.metrics(objectives)[idx]
+        mask[idx] = pareto_mask(X, maximize)
+        return mask
+
+    def frontier(
+        self,
+        objectives: Sequence[str] = DEFAULT_OBJECTIVES,
+        maximize: Sequence[bool] = DEFAULT_MAXIMIZE,
+        sort_by: str = "sustained_gflops",
+    ) -> list[DesignPoint]:
+        """Pareto-optimal points, materialized and sorted best-first."""
+        idx = np.flatnonzero(self.pareto_mask(objectives, maximize))
+        order = np.argsort(-np.asarray(self.data[sort_by], float)[idx])
+        return [self.point(int(i)) for i in idx[order]]
+
+    def best(self, key: str = "perf_per_watt") -> DesignPoint:
+        """The single best feasible point by ``key`` (paper: argmax GF/sW)."""
+        idx = np.flatnonzero(self.feasible)
+        if idx.size == 0:
+            raise ValueError(f"sweep of {len(self)} points has no feasible point")
+        vals = np.asarray(self.data[key], float)[idx]
+        return self.point(int(idx[int(np.argmax(vals))]))
+
+    def top(self, k: int, key: str = "sustained_gflops") -> list[DesignPoint]:
+        """Top-k feasible points by ``key`` (no dominance filtering)."""
+        idx = np.flatnonzero(self.feasible)
+        vals = np.asarray(self.data[key], float)[idx]
+        order = np.argsort(-vals)[:k]
+        return [self.point(int(i)) for i in idx[order]]
+
+    # ---- materialization ---------------------------------------------------
+
+    def point(self, i: int) -> DesignPoint:
+        """Re-evaluate lattice index ``i`` through the scalar model path."""
+        if self.target == "fpga":
+            return self.model.evaluate(
+                self.workload,
+                int(self.data["n"][i]),
+                int(self.data["m"][i]),
+                self.census,
+                **self.scalar_kwargs,
+            )
+        return self.model.evaluate(
+            self.workload,
+            int(self.data["block_rows"][i]),
+            int(self.data["m"][i]),
+            n_chips=int(self.data["n"][i]),
+        )
+
+    def table(self, k: int | None = None, frontier_only: bool = False) -> str:
+        if frontier_only:
+            pts = self.frontier()[:k] if k else self.frontier()
+        else:
+            order = np.argsort(-np.asarray(self.data["sustained_gflops"], float))
+            pts = [self.point(int(i)) for i in (order[:k] if k else order)]
+        return render_table(pts)
+
+
+# --------------------------------------------------------------------------
+# Explorer
+# --------------------------------------------------------------------------
+
+
+def _as_workload(source, elems: int | None, grid_w: int) -> StreamWorkload:
+    if isinstance(source, StreamWorkload):
+        return source
+    report = getattr(source, "hardware_report", source)
+    if elems is None:
+        raise ValueError("elems is required when exploring from a core/report")
+    return StreamWorkload.from_report(report, elems=elems, grid_w=grid_w)
+
+
+class Explorer:
+    """Sweeps a compiled SPD core's design space under both target models.
+
+    ``source`` may be a :class:`StreamWorkload`, a
+    :class:`~repro.core.compiler.HardwareReport`, or anything with a
+    ``hardware_report`` attribute (``CompiledCore``, ``LBMSimulation``);
+    for the latter two, ``elems`` (stream length) must be given.
+    """
+
+    def __init__(
+        self,
+        source,
+        elems: int | None = None,
+        grid_w: int = 0,
+        fpga: FPGAModel | None = None,
+        tpu: TPUModel | None = None,
+        census: dict | None = None,
+    ):
+        self.workload = _as_workload(source, elems, grid_w)
+        self.fpga = fpga or FPGAModel()
+        self.tpu = tpu or TPUModel()
+        report = getattr(source, "hardware_report", source)
+        self.census = census or getattr(report, "census", None)
+
+    # ---- lattice sweeps ----------------------------------------------------
+
+    def sweep_fpga(
+        self,
+        n_values: Sequence[int] = (1, 2, 4, 8),
+        m_values: Sequence[int] = (1, 2, 4, 8),
+        overlapped_passes: bool = True,
+    ) -> Sweep:
+        """Evaluate the full (n, m) lattice in one batched call."""
+        n, m = np.meshgrid(
+            np.asarray(n_values, np.int64), np.asarray(m_values, np.int64),
+            indexing="ij",
+        )
+        data = self.fpga.evaluate_batch(
+            self.workload, n.ravel(), m.ravel(), self.census,
+            overlapped_passes=overlapped_passes,
+        )
+        return Sweep(
+            "fpga", self.workload, self.fpga, data, self.census,
+            scalar_kwargs={"overlapped_passes": overlapped_passes},
+        )
+
+    def sweep_tpu(
+        self,
+        bh_values: Sequence[int] = (8, 16, 32, 64, 128, 256),
+        m_values: Sequence[int] = (1, 2, 4, 8, 16, 32),
+        chip_values: Sequence[int] = (1,),
+    ) -> Sweep:
+        """Evaluate the (block_h, m, chips) lattice in one batched call."""
+        bh, m, chips = np.meshgrid(
+            np.asarray(bh_values, np.int64),
+            np.asarray(m_values, np.int64),
+            np.asarray(chip_values, np.int64),
+            indexing="ij",
+        )
+        data = self.tpu.evaluate_batch(
+            self.workload, bh.ravel(), m.ravel(), chips.ravel()
+        )
+        return Sweep("tpu", self.workload, self.tpu, data)
+
+    def sweep(self, target: str, **kw) -> Sweep:
+        if target == "fpga":
+            return self.sweep_fpga(**kw)
+        if target == "tpu":
+            return self.sweep_tpu(**kw)
+        raise ValueError(f"unknown target {target!r} (want 'fpga' or 'tpu')")
+
+
+# --------------------------------------------------------------------------
+# Model -> measurement loop (TPU target only: the kernel we actually ship)
+# --------------------------------------------------------------------------
+
+
+@dataclass
+class ExecutedPoint:
+    """One frontier point run through the real Pallas kernel."""
+
+    point: DesignPoint
+    block_h: int  # block actually used (clamped to divide the grid height)
+    m: int
+    steps: int
+    wall_s: float
+    measured_mlups: float
+    measured_gflops: float
+    predicted_gflops: float
+    rel_error: float  # (predicted - measured) / predicted
+    interpret: bool
+
+
+def execute_frontier(
+    sweep: Sweep,
+    f,
+    attr,
+    one_tau: float,
+    u_lid: float = 0.0,
+    k: int = 3,
+    steps: int | None = None,
+    interpret: bool = True,
+    reps: int = 1,
+) -> list[ExecutedPoint]:
+    """Run the top-k Pareto points of a TPU sweep through ``lbm_stream``.
+
+    Each point's (block_h, m) is clamped onto the concrete grid with
+    :func:`repro.kernels.lbm_stream.ops.blocking_plan`, timed over ``reps``
+    measured calls (after one compile/warm-up call), and compared against
+    the model's predicted sustained GFlop/s. Off-TPU, ``interpret=True``
+    runs the kernel through the Pallas interpreter — the numerics are the
+    kernel's, the wall clock is the host's, so expect large ``rel_error``
+    there; on real TPU hardware pass ``interpret=False``.
+    """
+    import jax
+
+    from repro.kernels.lbm_stream.ops import lbm_run_blocked, resolve_run_plan
+
+    if sweep.target != "tpu":
+        raise ValueError(
+            "execute_frontier needs a TPU sweep (the FPGA target is a model "
+            "only; there is no Stratix V attached)"
+        )
+    h, w = f.shape[1], f.shape[2]
+    flops_per_elem = sweep.workload.flops_per_elem
+    out: list[ExecutedPoint] = []
+    for pt in sweep.frontier()[:k]:
+        block_h, m, nsteps = resolve_run_plan(h, pt, steps)
+
+        def run():
+            return lbm_run_blocked(
+                f, attr, one_tau, u_lid,
+                steps=nsteps, m=m, block_h=block_h, interpret=interpret,
+            )
+
+        jax.block_until_ready(run())  # compile + warm
+        t0 = time.perf_counter()
+        for _ in range(reps):
+            res = run()
+        jax.block_until_ready(res)
+        wall = (time.perf_counter() - t0) / reps
+
+        sites = h * w * nsteps
+        mlups = sites / wall / 1e6
+        measured = sites * flops_per_elem / wall / 1e9
+        predicted = pt.sustained_gflops
+        out.append(
+            ExecutedPoint(
+                point=pt,
+                block_h=block_h,
+                m=m,
+                steps=nsteps,
+                wall_s=wall,
+                measured_mlups=mlups,
+                measured_gflops=measured,
+                predicted_gflops=predicted,
+                rel_error=(predicted - measured) / predicted if predicted else 0.0,
+                interpret=interpret,
+            )
+        )
+    return out
+
+
+def render_executed(points: Sequence[ExecutedPoint]) -> str:
+    """Markdown table of predicted-vs-measured frontier executions."""
+    head = (
+        "| block_h | m | steps | predicted GF/s | measured GF/s | MLUPS "
+        "| rel err | mode |\n"
+        "|---------|---|-------|----------------|---------------|-------"
+        "|---------|------|"
+    )
+    rows = [
+        f"| {e.block_h} | {e.m} | {e.steps} | {e.predicted_gflops:12.1f} | "
+        f"{e.measured_gflops:11.2f} | {e.measured_mlups:6.2f} | "
+        f"{e.rel_error:+.3f} | {'interpret' if e.interpret else 'tpu'} |"
+        for e in points
+    ]
+    return "\n".join([head] + rows)

@@ -1,4 +1,7 @@
-"""Public jit'd wrappers for the LBM temporal-blocking kernel."""
+"""Public jit'd wrappers for the LBM temporal-blocking kernel, plus the
+explorer hand-off: :func:`blocking_plan` clamps a model-chosen
+(block_h, m) onto a concrete lattice and :func:`lbm_run_for_point` runs a
+``DesignPoint`` straight from a ``repro.core.explorer`` sweep."""
 
 from __future__ import annotations
 
@@ -8,6 +11,53 @@ import jax
 
 from .lbm_stream import lbm_multistep
 from .ref import lbm_multistep_ref
+
+
+def blocking_plan(h: int, block_h: int, m: int) -> tuple[int, int]:
+    """Legalize an explorer-chosen (block_h, m) for a grid of ``h`` rows.
+
+    The kernel requires ``block_h | h`` and ``m <= block_h`` (the halo is
+    sourced from one neighbor stripe per side). The model's lattice is
+    grid-agnostic, so its pick may violate either; this returns the
+    closest legal plan: the largest divisor of ``h`` that is <= the
+    requested block (or the smallest one >= m when the request is too
+    small), with ``m`` clamped into [1, h].
+    """
+    if h < 1:
+        raise ValueError(f"grid height must be positive, got {h}")
+    m = max(1, min(int(m), h))
+    divisors = [d for d in range(1, h + 1) if h % d == 0]
+    legal = [d for d in divisors if d >= m]
+    under = [d for d in legal if d <= block_h]
+    return (max(under) if under else min(legal)), m
+
+
+def resolve_run_plan(h: int, point, steps: int | None = None
+                     ) -> tuple[int, int, int]:
+    """Turn a DSE design point into a concrete (block_h, m, steps) plan.
+
+    ``point`` is any object with ``m`` and ``detail['block_rows']`` (a
+    :class:`repro.core.dse.DesignPoint` from a TPU sweep). The blocking is
+    legalized with :func:`blocking_plan`; ``steps`` defaults to one fused
+    launch (m steps) and is rounded down to a multiple of m.
+    """
+    block_h, m = blocking_plan(h, int(point.detail["block_rows"]),
+                               int(point.m))
+    nsteps = m if steps is None else max(m, (steps // m) * m)
+    return block_h, m, nsteps
+
+
+def lbm_run_for_point(f, attr, one_tau, point, *, steps: int | None = None,
+                      u_lid=0.0, interpret: bool = True):
+    """Advance the lattice using a DSE design point's (block_h, m).
+
+    See :func:`resolve_run_plan` for how the point is legalized.
+    Returns ``(result, (block_h, m))``.
+    """
+    block_h, m, nsteps = resolve_run_plan(f.shape[1], point, steps)
+    out = lbm_run_blocked(f, attr, one_tau, u_lid, steps=nsteps, m=m,
+                          block_h=block_h, interpret=interpret)
+    return out, (block_h, m)
 
 
 @functools.partial(jax.jit, static_argnames=("steps", "m", "block_h", "interpret"))
@@ -25,4 +75,11 @@ def lbm_run_blocked(f, attr, one_tau, u_lid=0.0, *, steps: int, m: int = 4,
     return jax.lax.fori_loop(0, steps // m, body, f)
 
 
-__all__ = ["lbm_multistep", "lbm_multistep_ref", "lbm_run_blocked"]
+__all__ = [
+    "blocking_plan",
+    "lbm_multistep",
+    "lbm_multistep_ref",
+    "lbm_run_blocked",
+    "lbm_run_for_point",
+    "resolve_run_plan",
+]

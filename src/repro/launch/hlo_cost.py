@@ -118,12 +118,24 @@ def parse_hlo(text: str) -> dict[str, Computation]:
             out_elems = 1
             for d in out_dims:
                 out_elems *= d
-            # contracting size from lhs shape + lhs_contracting_dims
-            lhs_m = re.match(r"\s*%?([\w.\-]+)", rest)
+            # contracting size from lhs shape + lhs_contracting_dims. Newer
+            # XLA dumps print operands with inline types —
+            # ``dot(f32[128,256]{1,0} %lhs, ...)`` — so read the lhs shape
+            # straight off the operand list when present, falling back to
+            # the defining instruction's recorded shape otherwise.
             cd_m = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", line)
+            lhs_shape: list[int] = []
+            tm = _SHAPE_RE.match(rest.lstrip())
+            if tm and tm.group(1) in _DTYPE_BYTES:
+                lhs_shape = [int(d) for d in tm.group(2).split(",") if d]
+            else:
+                lhs_m = re.match(r"\s*%?([\w.\-]+)", rest)
+                if lhs_m:
+                    lhs_shape = _first_shape_dims(
+                        name_shape.get(lhs_m.group(1), "")
+                    )
             k = 1
-            if lhs_m and cd_m:
-                lhs_shape = _first_shape_dims(name_shape.get(lhs_m.group(1), ""))
+            if cd_m and lhs_shape:
                 for ci in cd_m.group(1).split(","):
                     if ci and int(ci) < len(lhs_shape):
                         k *= lhs_shape[int(ci)]

@@ -22,6 +22,8 @@ from __future__ import annotations
 from functools import partial
 
 import jax
+
+from repro.compat import shard_map
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
@@ -98,7 +100,7 @@ def moe_ep_apply(xt, idx, gates, w_gate, w_up, w_down, *, mesh, dp_axes,
         ).sum(1)
         return out
 
-    return jax.shard_map(
+    return shard_map(
         body,
         mesh=mesh,
         in_specs=(

@@ -17,6 +17,8 @@ from functools import partial
 from typing import Callable
 
 import jax
+
+from repro.compat import pvary, shard_map
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
@@ -47,10 +49,8 @@ def pipelined_forward(
 
         # carries are device-varying (each stage holds different data):
         # mark them so under shard_map's varying-axis type system
-        buf = jax.lax.pcast(jnp.zeros_like(micro), (stage_axis,),
-                            to="varying")  # output slots
-        state = jax.lax.pcast(jnp.zeros_like(micro[0]), (stage_axis,),
-                              to="varying")  # in-flight activation
+        buf = pvary(jnp.zeros_like(micro), (stage_axis,))  # output slots
+        state = pvary(jnp.zeros_like(micro[0]), (stage_axis,))  # in-flight
 
         def tick(carry, t):
             state, buf = carry
@@ -81,7 +81,7 @@ def pipelined_forward(
         return buf
 
     return jax.jit(
-        jax.shard_map(
+        shard_map(
             run,
             mesh=mesh,
             in_specs=(P(stage_axis), P()),

@@ -101,6 +101,14 @@ def run(
         saver.wait()
     finally:
         prefetch.close()
+        # Drain any in-flight async write before this incarnation exits: a
+        # real process death takes its writer with it, but here the "crash"
+        # is an exception and the daemon thread would survive to race the
+        # restarted worker on the same step_XXXXXXXX.tmp directory.
+        try:
+            saver.wait()
+        except Exception:
+            pass  # torn-write recovery is restore_latest's job
     return params, opt_state, state
 
 

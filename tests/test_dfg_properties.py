@@ -10,6 +10,10 @@
 
 import jax.numpy as jnp
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")  # whole module is property tests
+
 from hypothesis import given, settings
 from hypothesis import strategies as st
 

@@ -1,0 +1,45 @@
+"""Docs stay wired to the code: every ``DESIGN.md §…`` reference in src/
+must resolve to a real section anchor in DESIGN.md."""
+
+import os
+import re
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+REF_RE = re.compile(r"DESIGN\.md\s+(§[\w-]+)")
+ANCHOR_RE = re.compile(r"^#+\s+(§[\w-]+)", re.MULTILINE)
+
+
+def _src_refs():
+    refs = []
+    for dirpath, _, files in os.walk(os.path.join(ROOT, "src")):
+        for name in files:
+            if not name.endswith(".py"):
+                continue
+            path = os.path.join(dirpath, name)
+            with open(path, encoding="utf-8") as fh:
+                for anchor in REF_RE.findall(fh.read()):
+                    refs.append((os.path.relpath(path, ROOT), anchor))
+    return refs
+
+
+def test_design_md_exists():
+    assert os.path.exists(os.path.join(ROOT, "DESIGN.md"))
+
+
+def test_every_design_ref_resolves():
+    with open(os.path.join(ROOT, "DESIGN.md"), encoding="utf-8") as fh:
+        anchors = set(ANCHOR_RE.findall(fh.read()))
+    assert anchors, "DESIGN.md has no § section anchors"
+    refs = _src_refs()
+    assert refs, "expected DESIGN.md references in src/ docstrings"
+    missing = [(f, a) for f, a in refs if a not in anchors]
+    assert not missing, f"unresolved DESIGN.md references: {missing}"
+
+
+def test_readme_quickstart_matches_roadmap():
+    """README's quickstart must carry the tier-1 command from ROADMAP.md."""
+    with open(os.path.join(ROOT, "README.md"), encoding="utf-8") as fh:
+        readme = fh.read()
+    assert "python -m pytest -x -q" in readme
+    assert "PYTHONPATH=src" in readme

@@ -35,6 +35,7 @@ def test_pjit_sharded_train_step_matches_single_device():
     run_in_subprocess("""
         import dataclasses, jax, jax.numpy as jnp, numpy as np
         from jax.sharding import NamedSharding, PartitionSpec as P
+        from repro.compat import set_mesh
         from repro.configs import get_arch
         from repro.configs.base import ShapeConfig
         from repro.models import registry
@@ -60,7 +61,7 @@ def test_pjit_sharded_train_step_matches_single_device():
         pspecs = build_param_specs(
             jax.eval_shape(bundle.init, jax.random.PRNGKey(0)),
             model_axis_size=4)
-        with jax.set_mesh(mesh):
+        with set_mesh(mesh):
             sh = lambda spec: NamedSharding(mesh, spec)
             params_s = jax.tree.map(
                 lambda x, s: jax.device_put(x, sh(s)), params, pspecs)
@@ -117,6 +118,7 @@ def test_compressed_psum_across_devices():
     run_in_subprocess("""
         import jax, jax.numpy as jnp, numpy as np
         from jax.sharding import PartitionSpec as P
+        from repro.compat import shard_map
         from repro.parallel.compression import (CompressionConfig,
             compressed_psum, init_residuals)
 
@@ -129,7 +131,7 @@ def test_compressed_psum_across_devices():
             return compressed_psum(gs, rs, 'data',
                                    CompressionConfig('int8_ef'))
 
-        f = jax.jit(jax.shard_map(body, mesh=mesh,
+        f = jax.jit(shard_map(body, mesh=mesh,
                     in_specs=(P('data', None), P('data', None)),
                     out_specs=(P(None), P('data', None))))
         # shard_map splits axis0; each worker sees (1, 64)
@@ -140,7 +142,7 @@ def test_compressed_psum_across_devices():
         # error feedback residual = local grad - local dequantized
         assert float(np.abs(np.asarray(new_r['w'])).max()) < 2e-3
         # exact scheme is exact
-        f0 = jax.jit(jax.shard_map(
+        f0 = jax.jit(shard_map(
             lambda gs, rs: compressed_psum(gs, rs, 'data',
                                            CompressionConfig('none')),
             mesh=mesh, in_specs=(P('data', None), P('data', None)),
@@ -158,6 +160,7 @@ def test_dryrun_machinery_small_mesh():
     run_in_subprocess("""
         import dataclasses, jax, jax.numpy as jnp
         from jax.sharding import NamedSharding, PartitionSpec as P
+        from repro.compat import set_mesh
         from repro.configs import get_arch
         from repro.configs.base import ShapeConfig
         from repro.models import registry
@@ -186,11 +189,12 @@ def test_dryrun_machinery_small_mesh():
             jax.tree.map(sh, ospecs),
             {k: sh(P('data', None)) for k in batch},
         )
-        with jax.set_mesh(mesh):
+        with set_mesh(mesh):
             lowered = jax.jit(step, in_shardings=in_sh).lower(
                 params_shape, opt_shape, batch)
             compiled = lowered.compile()
-        ca = compiled.cost_analysis()
+        from repro.compat import cost_analysis
+        ca = cost_analysis(compiled)
         ma = compiled.memory_analysis()
         assert ca.get('flops', 0) > 0
         txt = compiled.as_text()

@@ -8,8 +8,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from _hypothesis_stub import given, settings, st
 
 from repro.configs.base import ShapeConfig
 from repro.configs import get_arch
