@@ -80,6 +80,26 @@ def run(topk: int = 3, interpret: bool = True) -> list[str]:
             "interpret=False to close the loop on hardware)"
         )
 
+    out.append(
+        "\n## DSE sweep 2c: second SPD app (2-D diffusion) through the "
+        "generic SPD->Pallas codegen"
+    )
+    from repro.apps import diffusion as dif
+
+    dsim = dif.DiffusionSimulation(MEASURE_H, MEASURE_W, alpha=0.2)
+    dex = dsim.explorer()
+    dsweep = dex.sweep_tpu(bh_values=(8, 16, 32, 64), m_values=(1, 2, 4, 8))
+    u0, _ = dif.sine_init(MEASURE_H, MEASURE_W)
+    druns = dex.execute_frontier(
+        dsweep, dsim.state(u0), (dsim.alpha,), k=topk, interpret=interpret
+    )
+    out.append(render_executed(druns))
+    out.append(
+        f"(no hand-written kernel: {len(dsim.kernel.summary.offsets)} "
+        f"stencil offsets inferred from the DFG, halo = "
+        f"{dsim.kernel.summary.halo_y} row/step — docs/pipeline.md)"
+    )
+
     out.append("\n## DSE sweep 3: LM mesh planner (granite-34b, 256 chips)")
     g = get_arch("granite-34b")
     stats = ArchStats(

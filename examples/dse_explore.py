@@ -2,86 +2,21 @@
 
 Compile the SPD LBM core, sweep the full (n, m) lattice on the FPGA model
 and the (block_h, m) lattice on the TPU model in batched NumPy, extract
-the Pareto frontiers, execute the TPU frontier through the real Pallas
-kernel, and plan LM meshes with the same spatial/temporal trade-off:
+the Pareto frontiers, execute the TPU frontiers through real Pallas
+kernels — the hand-written ``lbm_stream`` for LBM *and* the generic
+SPD→Pallas codegen path for the 2-D diffusion app — and plan LM meshes
+with the same spatial/temporal trade-off:
 
     PYTHONPATH=src python examples/dse_explore.py --arch granite-34b
 
-Use ``--no-execute`` to skip the (host-speed) interpret-mode kernel runs,
-``--topk`` to execute more frontier points.
+or, after ``pip install -e .``, simply ``repro-explore``. Use
+``--no-execute`` to skip the (host-speed) interpret-mode kernel runs,
+``--topk`` to execute more frontier points. The implementation lives in
+:mod:`repro.cli` so the installed console script and this checkout
+script stay one code path.
 """
 
-import argparse
-
-from repro.apps import lbm
-from repro.configs import get_arch
-from repro.core.explorer import execute_frontier, render_executed
-from repro.core.planner import ArchStats, plan, render_plans
-
-
-def main():
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="granite-34b")
-    ap.add_argument("--chips", type=int, default=256)
-    ap.add_argument("--batch", type=int, default=256)
-    ap.add_argument("--seq", type=int, default=4096)
-    ap.add_argument("--topk", type=int, default=2)
-    ap.add_argument("--no-execute", action="store_true",
-                    help="skip the interpret-mode Pallas runs")
-    args = ap.parse_args()
-
-    print("=" * 72)
-    print("1) The paper's case study: LBM on the Stratix V model")
-    print("=" * 72)
-    sim = lbm.LBMSimulation(lbm.LBMProblem(300, 720, mode="wrap"))
-    ex = sim.explorer()
-    sweep = ex.sweep_fpga(n_values=(1, 2, 4, 8), m_values=(1, 2, 4, 8))
-    print(sweep.table(k=10))
-    print()
-    print("Pareto frontier (max throughput, max perf/W, min resources):")
-    print(sweep.table(frontier_only=True))
-    best = sweep.best("perf_per_watt")
-    print(f"-> best configuration: (n, m) = ({best.n}, {best.m})  "
-          f"[paper §III: (1, 4)]")
-
-    print()
-    print("=" * 72)
-    print("2) Hardware adaptation: temporal blocking on TPU v5e")
-    print("=" * 72)
-    tsweep = ex.sweep_tpu()
-    print(tsweep.table(k=8))
-    print()
-    print("TPU Pareto frontier:")
-    print(tsweep.table(frontier_only=True, k=6))
-
-    if not args.no_execute:
-        print()
-        print("=" * 72)
-        print(f"3) Model -> measurement: top-{args.topk} frontier points "
-              f"through the Pallas kernel (interpret mode, 64x128)")
-        print("=" * 72)
-        mex = lbm.LBMSimulation(lbm.LBMProblem(64, 128, mode="wrap")).explorer()
-        msweep = mex.sweep_tpu(bh_values=(8, 16, 32, 64),
-                               m_values=(1, 2, 4, 8))
-        f0, attr, _ = lbm.taylor_green_init(64, 128)
-        runs = execute_frontier(msweep, f0, attr, one_tau=1 / 0.8,
-                                k=args.topk, interpret=True)
-        print(render_executed(runs))
-
-    print()
-    print("=" * 72)
-    print(f"4) The same trade on an LM fleet: {args.arch} on "
-          f"{args.chips} chips")
-    print("   (spatial n -> dp, temporal m -> pp, in-PE -> tp)")
-    print("=" * 72)
-    cfg = get_arch(args.arch)
-    stats = ArchStats(
-        name=cfg.name, params=cfg.num_params(),
-        active_params=cfg.active_params(), n_layers=cfg.n_layers,
-        d_model=cfg.d_model, global_batch=args.batch, seq_len=args.seq,
-    )
-    print(render_plans(plan(stats, args.chips), top=10))
-
+from repro.cli import explore_main
 
 if __name__ == "__main__":
-    main()
+    explore_main()

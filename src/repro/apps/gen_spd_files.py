@@ -16,6 +16,7 @@ import os
 
 from repro.core import Registry, parse_spd, temporal_cascade_spd
 
+from .diffusion import diffusion_spd
 from .lbm import bndry_spd, calc_spd, pe_spd, trans_spd
 
 # The paper's grid: 720 x 300, periodic.
@@ -36,6 +37,9 @@ def sources() -> dict[str, str]:
         "pe_x1.spd": pe_src,
         "pe_x1_t2.spd": temporal_cascade_spd(pe_core, 2),
         "pe_x1_t4.spd": temporal_cascade_spd(pe_core, 4),
+        # The second SPD application (repro.apps.diffusion): proves the
+        # SPD->Pallas codegen path on a non-LBM core.
+        "diffusion2d.spd": diffusion_spd(WIDTH, MODE),
     }
 
 

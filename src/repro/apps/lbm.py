@@ -237,11 +237,25 @@ def bndry_spd() -> str:
 
 
 def _bndry_hdl_impl(ins, p):
-    """Fixed-function bounce-back unit (the paper's uLBM_bndry HDL node)."""
-    f = jnp.stack([jnp.asarray(x, jnp.float32) for x in ins[:9]])
+    """Fixed-function bounce-back unit (the paper's uLBM_bndry HDL node).
+
+    Written elementwise over per-direction streams with Python-scalar
+    lattice constants (no captured constant arrays) so the same impl
+    lowers both on full grids and inside codegen'd Pallas stream kernels
+    (docs/pipeline.md §codegen).
+    """
+    f = [jnp.asarray(x, jnp.float32) for x in ins[:9]]
     attr, u_lid, rho0 = ins[9], ins[10], ins[11]
-    out = bounce_back(f, attr, u_lid, rho0)
-    return [out[i] for i in range(9)] + [attr]
+    solid = attr >= 0.5
+    moving = attr >= 1.5
+    out = []
+    for i in range(9):
+        refl = f[int(OPP[i])]
+        coef = 6.0 * float(W[i]) * float(EX[i])
+        bb = jnp.where(moving, refl + coef * rho0 * u_lid, refl) if coef \
+            else refl
+        out.append(jnp.where(solid, bb, f[i]))
+    return out + [attr]
 
 
 def _register_bndry_module(reg: Registry) -> None:

@@ -2,10 +2,12 @@
 compiler to JAX, (n, m) parallelism transforms, and the design-space
 exploration engine."""
 
+from .codegen import CodegenError, StencilSummary, StreamKernel, stencil_summary
 from .compiler import CompiledCore, HardwareReport, Registry, SPDCompileError
 from .dfg import Core, Node, SPDError, SPDGraphError, schedule
 from .dse import DesignPoint, FPGAModel, StreamWorkload, TPUModel
 from .explorer import Explorer, Sweep, execute_frontier, pareto_mask
+from .legalize import VMEM_BYTES, blocking_plan, resolve_run_plan
 from .library import LibraryModule, default_registry_modules
 from .spd import SPDParseError, parse_spd, parse_spd_file
 from .transforms import (
@@ -16,6 +18,7 @@ from .transforms import (
 )
 
 __all__ = [
+    "CodegenError",
     "CompiledCore",
     "Core",
     "DesignPoint",
@@ -29,17 +32,23 @@ __all__ = [
     "SPDError",
     "SPDGraphError",
     "SPDParseError",
+    "StencilSummary",
+    "StreamKernel",
     "StreamWorkload",
     "Sweep",
     "TPUModel",
+    "VMEM_BYTES",
+    "blocking_plan",
     "default_registry_modules",
     "execute_frontier",
     "pareto_mask",
     "parse_spd",
     "parse_spd_file",
+    "resolve_run_plan",
     "schedule",
     "spatial_duplicate",
     "spatial_duplicate_spd",
+    "stencil_summary",
     "temporal_cascade",
     "temporal_cascade_spd",
 ]

@@ -1,0 +1,454 @@
+"""SPD core → Pallas TPU stream-kernel codegen.
+
+``repro.core.compiler`` lowers an SPD core to a per-point JAX dataflow
+function; this module lowers the same :class:`CompiledCore` one level
+further, into an *executable temporal-blocking Pallas kernel* with the
+structure of the hand-written ``repro.kernels.lbm_stream`` — the missing
+bottom of the paper's flow, where the generated datapath actually runs
+(docs/pipeline.md §codegen, DESIGN.md §7). Three pieces:
+
+1. **Stencil-offset inference** (:func:`stencil_summary`) — an abstract
+   interpretation of the core's DFG that tracks, for every main output
+   port, the set of (dy, dx) grid offsets of the main inputs it reads.
+   ``Stencil2D`` nodes add their offset; EQU/elementwise nodes union
+   their operands; sub-core calls compose offsets additively along the
+   dataflow path. The per-step y-halo is ``max |dy|`` over all reads
+   (docs/pipeline.md §codegen).
+2. **Stripe lowering** (:meth:`StreamKernel._step_fn`) — re-evaluates the
+   DFG over ``(rows, W)`` row stripes instead of whole grids: y stencil
+   reads become non-periodic in-stripe shifts (the halo rows supply the
+   neighbor values; ``halo`` edge rows go stale per application — the
+   temporal-blocking trapezoid), x stencil reads become periodic
+   in-register shifts (the full row width is VMEM-resident).
+3. **Launch + legalization** — the stripe function is handed to
+   :func:`repro.kernels.spd_stream.spd_multistep` for the
+   ``(block_h + 2·m·halo)``-row Pallas launch; explorer-chosen
+   (block_h, m) plans are legalized by the shared
+   :mod:`repro.core.legalize` (docs/pipeline.md §legalize) with this
+   kernel's inferred halo.
+
+Correctness contract (asserted in ``tests/test_codegen.py``): in
+interpret mode the kernel bit-matches m repeated applications of the
+compiler's reference JAX function (:meth:`StreamKernel.reference`), for
+any legal (m, block_h) decomposition.
+
+Supported cores: no branch streams, ``|main_in| == |main_out|`` (outputs
+feed inputs across fused steps, the same chaining contract as
+``temporal_cascade``), stream state expressed as ``Stencil2D`` nodes with
+``mode=wrap`` (periodic grids; 1-D ``Delay``/``StreamForward``/
+``StreamBackward`` state has no 2-D stripe equivalent and is rejected).
+"""
+
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Mapping, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from .compiler import CompiledCore, eval_expr
+from .dfg import SPDError
+from .legalize import resolve_run_plan
+from .library import LibraryModule
+
+#: 1-D stream-state modules with no 2-D stripe lowering.
+_STREAM_1D = ("Delay", "StreamForward", "StreamBackward")
+
+
+class CodegenError(SPDError):
+    """The core cannot be lowered to a stream kernel (with the reason)."""
+
+
+# --------------------------------------------------------------------------
+# Stencil-offset inference
+# --------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class StencilSummary:
+    """What a core's outputs read from the streamed grid.
+
+    ``port_reads`` maps each output port to the set of
+    ``(input_port, dy, dx)`` triples it (transitively) consumes:
+    "this output reads that input at grid offset (y−dy, x−dx)".
+    ``offsets`` is the union of all (dy, dx); ``halo_y``/``halo_x`` are
+    the per-step stencil reach (``max |dy|`` / ``max |dx|``);
+    ``modes`` collects the boundary modes of every Stencil2D crossed.
+    """
+
+    port_reads: Mapping[str, frozenset]
+    offsets: frozenset
+    halo_y: int
+    halo_x: int
+    modes: frozenset
+
+    def halo(self) -> int:
+        """Rows of halo one application of the core consumes per side."""
+        return self.halo_y
+
+
+def _core_reads(compiled: CompiledCore) -> dict[str, set]:
+    """Per-output ``(input_index, dy, dx)`` read sets of one core.
+
+    Abstract interpretation over the toposorted DFG: every variable
+    carries the set of (core-input index, dy, dx) it transitively reads.
+    Indices are positions in ``core.input_ports()`` (main + brch + regs);
+    register/param inputs are scalars and carry the empty set.
+
+    Memoized per compiled core: sub-cores are shared across call sites
+    (and cascades repeat the same PE m times), so without the cache the
+    walk would re-derive every callee's read set at every call site.
+    """
+    cached = getattr(compiled, "_stencil_reads", None)
+    if cached is not None:
+        return cached
+    core = compiled.core
+    alias = core.alias_map()
+    main = set(core.main_input_ports()) | set(core.brch_input_ports())
+    env: dict[str, set] = {}
+    for i, p in enumerate(core.input_ports()):
+        env[p] = {(i, 0, 0)} if p in main else set()
+    for p in core.params:
+        env[p] = set()
+
+    for node in core.toposort():
+        ins = [env[alias.get(v, v)] for v in node.inputs]
+        merged = set().union(*ins) if ins else set()
+        if node.kind == "equ":
+            env[node.outputs[0]] = merged
+            continue
+        mod = compiled.registry.lookup(node.module)
+        if isinstance(mod, LibraryModule):
+            if mod.name in _STREAM_1D:
+                raise CodegenError(
+                    f"core {core.name}: node {node.name} uses 1-D stream "
+                    f"module {mod.name}; express grid state as Stencil2D "
+                    "for stream codegen"
+                )
+            if mod.name == "Stencil2D":
+                p = mod.resolve_params(node, core.params)
+                dy, dx = int(p.get("dy", 0)), int(p.get("dx", 0))
+                env[node.outputs[0]] = {
+                    (i, oy + dy, ox + dx) for (i, oy, ox) in ins[0]
+                }
+            else:
+                # Library modules other than the stencil buffer are
+                # pointwise over the stream (mux, comparator, fixed-
+                # function units): offsets pass through unchanged.
+                for o in node.outputs:
+                    env[o] = merged
+        else:
+            # Sub-core call: compose the callee's per-output read sets
+            # with this call site's argument offsets (additive).
+            sub = _core_reads(mod)
+            sub_outs = mod.core.output_ports()
+            if len(sub_outs) != len(node.outputs):
+                raise CodegenError(
+                    f"node {node.name}: module {node.module} has "
+                    f"{len(sub_outs)} outputs, node declares "
+                    f"{len(node.outputs)}"
+                )
+            for o_port, o_var in zip(sub_outs, node.outputs):
+                acc: set = set()
+                for (i, dy, dx) in sub[o_port]:
+                    acc.update(
+                        (j, oy + dy, ox + dx) for (j, oy, ox) in ins[i]
+                    )
+                env[o_var] = acc
+
+    reads = {p: env[alias.get(p, p)] for p in core.output_ports()}
+    compiled._stencil_reads = reads
+    return reads
+
+
+def _stencil_modes(compiled: CompiledCore) -> set:
+    """Boundary modes of every Stencil2D reachable from ``compiled``."""
+    core = compiled.core
+    modes: set = set()
+    for node in core.nodes:
+        if node.kind != "hdl":
+            continue
+        mod = compiled.registry.lookup(node.module)
+        if isinstance(mod, LibraryModule):
+            if mod.name == "Stencil2D":
+                p = mod.resolve_params(node, core.params)
+                if int(p.get("dy", 0)) or int(p.get("dx", 0)):
+                    modes.add(str(p.get("mode", "zero")))
+        else:
+            modes |= _stencil_modes(mod)
+    return modes
+
+
+def stencil_summary(compiled: CompiledCore) -> StencilSummary:
+    """Infer the stencil footprint of a compiled core's DFG.
+
+    Walks the graph once (recursing into sub-cores, memoized per core)
+    and returns which input ports each output reads at which grid
+    offsets, plus the halo the temporal-blocking kernel must carry per
+    fused step. Cached on the compiled core: ``stream_halo``,
+    ``stream_kernel()`` and direct callers all share one walk.
+    """
+    cached = getattr(compiled, "_stencil_summary", None)
+    if cached is not None:
+        return cached
+    names = compiled.core.input_ports()
+    reads = {
+        port: frozenset((names[i], dy, dx) for (i, dy, dx) in triples)
+        for port, triples in _core_reads(compiled).items()
+    }
+    offsets = frozenset(
+        (dy, dx) for triples in reads.values() for (_, dy, dx) in triples
+    )
+    summary = StencilSummary(
+        port_reads=reads,
+        offsets=offsets,
+        halo_y=max((abs(dy) for dy, _ in offsets), default=0),
+        halo_x=max((abs(dx) for _, dx in offsets), default=0),
+        modes=frozenset(_stencil_modes(compiled)),
+    )
+    compiled._stencil_summary = summary
+    return summary
+
+
+# --------------------------------------------------------------------------
+# Stripe-mode DFG evaluation
+# --------------------------------------------------------------------------
+
+
+def _stripe_shift(x, dy: int, dx: int):
+    """``out[y, x] = in[y-dy, x-dx]`` on a (rows, W) stripe.
+
+    y is shifted non-periodically with zero fill — the stripe's halo rows
+    hold the true neighbor values, and rows that consume the zero fill
+    are exactly the rows the trapezoid retires; x is shifted
+    periodically in-register (the full row width is resident).
+    """
+    if dy:
+        pad = jnp.zeros((abs(dy),) + x.shape[1:], x.dtype)
+        x = (
+            jnp.concatenate([pad, x[:-dy]], axis=0)
+            if dy > 0
+            else jnp.concatenate([x[-dy:], pad], axis=0)
+        )
+    dx %= x.shape[1]  # periodic: offsets beyond one row width wrap
+    if dx:
+        # With dx normalized into [1, W), this one concatenate is the
+        # periodic shift out[:, x] = in[:, (x - dx) mod W].
+        x = jnp.concatenate([x[:, -dx:], x[:, :-dx]], axis=1)
+    return x
+
+
+def _eval_stripe(compiled: CompiledCore, env: dict) -> list:
+    """Evaluate a core's DFG over (rows, W) stripe arrays.
+
+    Structurally identical to :meth:`CompiledCore.apply` (same casts,
+    same ``eval_expr``, same node order) so the kernel's arithmetic
+    bit-matches the compiler's reference function — only ``Stencil2D``
+    is re-lowered to :func:`_stripe_shift` semantics, and sub-core calls
+    recurse through this evaluator instead of ``apply``.
+    """
+    core = compiled.core
+    alias = core.alias_map()
+    for node in core.toposort():
+        ins = [env[alias.get(v, v)] for v in node.inputs]
+        if node.kind == "equ":
+            local = dict(env)
+            local.update({
+                v: jnp.asarray(env[alias.get(v, v)], jnp.float32)
+                for v in node.inputs
+            })
+            env[node.outputs[0]] = eval_expr(node.expr, local)
+            continue
+        mod = compiled.registry.lookup(node.module)
+        if isinstance(mod, LibraryModule):
+            if mod.name in _STREAM_1D:
+                raise CodegenError(
+                    f"core {core.name}: node {node.name} uses 1-D stream "
+                    f"module {mod.name}; not lowerable to a 2-D stripe"
+                )
+            if mod.name == "Stencil2D":
+                p = mod.resolve_params(node, core.params)
+                outs = [
+                    _stripe_shift(
+                        jnp.asarray(ins[0], jnp.float32),
+                        int(p.get("dy", 0)), int(p.get("dx", 0)),
+                    )
+                ]
+            else:
+                outs = mod.apply(ins, mod.resolve_params(node, core.params))
+        else:
+            sub_env: dict = dict(zip(mod.core.input_ports(), ins))
+            sub_env.update({
+                k: jnp.float32(v) for k, v in mod.core.params.items()
+            })
+            outs = _eval_stripe(mod, sub_env)
+        if len(outs) != len(node.outputs):
+            raise CodegenError(
+                f"node {node.name}: module {node.module} returned "
+                f"{len(outs)} outputs, node declares {len(node.outputs)}"
+            )
+        for name, val in zip(node.outputs, outs):
+            env[name] = val
+    out = []
+    for p in core.output_ports():
+        src = alias.get(p, p)
+        if src not in env:
+            raise CodegenError(
+                f"core {core.name}: output port {p!r} undriven"
+            )
+        out.append(env[src])
+    return out
+
+
+# --------------------------------------------------------------------------
+# The codegen'd kernel
+# --------------------------------------------------------------------------
+
+
+class StreamKernel:
+    """A compiled SPD core lowered to a temporal-blocking Pallas kernel.
+
+    Obtained via :meth:`CompiledCore.stream_kernel`. The grid state is a
+    stacked ``(P, H, W)`` f32 array with one channel per main-stream port
+    (in ``main_in`` order); ``Append_Reg`` values are passed as a scalar
+    tuple. One fused launch (:meth:`__call__`) advances ``m`` time steps
+    per HBM round-trip; :meth:`run_for_point` legalizes and runs a DSE
+    design point straight from an explorer sweep
+    (docs/pipeline.md §execute).
+    """
+
+    def __init__(self, compiled: CompiledCore):
+        core = compiled.core
+        if core.brch_input_ports() or core.brch_output_ports():
+            raise CodegenError(
+                f"core {core.name}: branch streams are not lowerable to a "
+                "stream kernel (no per-element side channel on the grid)"
+            )
+        if len(core.main_input_ports()) != len(core.main_output_ports()):
+            raise CodegenError(
+                f"core {core.name}: |main_in| != |main_out| "
+                f"({len(core.main_input_ports())} != "
+                f"{len(core.main_output_ports())}); fused steps chain "
+                "outputs back into inputs"
+            )
+        self.compiled = compiled
+        self.summary = stencil_summary(compiled)
+        bad = self.summary.modes - {"wrap"}
+        if bad:
+            raise CodegenError(
+                f"core {core.name}: Stencil2D mode(s) {sorted(bad)} not "
+                "supported; the stream kernel's y-halo is periodic "
+                "(mode=wrap). Express walls via stream attributes."
+            )
+        self.halo = self.summary.halo()
+        self._ports = core.main_input_ports()
+        self._regs = list(core.regs)
+        self._params = dict(core.params)
+        from repro.kernels.spd_stream.spd_stream import spd_multistep
+
+        self._multistep = jax.jit(
+            functools.partial(spd_multistep, self._step_fn, halo=self.halo),
+            static_argnames=("m", "block_h", "interpret"),
+        )
+        # jit'd so XLA applies the same mul-add contractions as inside the
+        # kernel: this is what makes the bit-match contract hold exactly.
+        self._reference = jax.jit(self._reference_impl, static_argnames=("m",))
+
+    # ---- the lowered stripe function --------------------------------------
+
+    def _step_fn(self, f_ext, regs):
+        """One application of the core over an extended (halo'd) stripe."""
+        env: dict = {p: f_ext[i] for i, p in enumerate(self._ports)}
+        env.update(dict(zip(self._regs, regs)))
+        env.update({k: jnp.float32(v) for k, v in self._params.items()})
+        outs = _eval_stripe(self.compiled, env)
+        n = len(self._ports)
+        return jnp.stack([jnp.asarray(o, f_ext.dtype) for o in outs[:n]])
+
+    # ---- launches ----------------------------------------------------------
+
+    def _scal(self, regs: Sequence) -> jnp.ndarray:
+        if len(regs) != len(self._regs):
+            raise CodegenError(
+                f"core {self.compiled.core.name}: expected "
+                f"{len(self._regs)} register values {self._regs}, "
+                f"got {len(regs)}"
+            )
+        # SMEM refs need a non-empty shape; pad reg-less cores with one 0.
+        vals = list(regs) if regs else [0.0]
+        return jnp.asarray(vals, jnp.float32)
+
+    def __call__(self, state, regs: Sequence = (), *, m: int = 1,
+                 block_h: int = 32, interpret: bool = True):
+        """One fused launch: advance ``state`` by ``m`` time steps."""
+        return self._multistep(
+            state, self._scal(regs), m=m, block_h=block_h,
+            interpret=interpret,
+        )
+
+    def run_blocked(self, state, regs: Sequence = (), *, steps: int,
+                    m: int, block_h: int, interpret: bool = True):
+        """Advance ``steps`` time steps using m-fused kernel launches."""
+        from repro.kernels.spd_stream.ops import stream_run_blocked
+
+        return stream_run_blocked(
+            self._multistep, state, self._scal(regs), steps=steps, m=m,
+            block_h=block_h, interpret=interpret,
+        )
+
+    def run_for_point(self, state, regs: Sequence = (), *, point,
+                      steps: int | None = None, interpret: bool = True):
+        """Advance the grid using a DSE design point's (block_h, m).
+
+        The point is legalized with the shared
+        :func:`repro.core.legalize.resolve_run_plan`, using this kernel's
+        inferred halo and the state's concrete width for the VMEM clamp.
+        Returns ``(result, (block_h, m))``.
+        """
+        p, h, w = state.shape
+        block_h, m, nsteps = resolve_run_plan(
+            h, point, steps, halo=self.halo, width=w, words=p,
+        )
+        out = self.run_blocked(
+            state, regs, steps=nsteps, m=m, block_h=block_h,
+            interpret=interpret,
+        )
+        return out, (block_h, m)
+
+    # ---- the compiler's reference function --------------------------------
+
+    def reference(self, state, regs: Sequence = (), *, m: int = 1):
+        """m repeated applications of the compiled core's JAX function.
+
+        This is the semantics the kernel must reproduce bit-for-bit in
+        interpret mode: :meth:`CompiledCore.apply` on the full grid
+        (``Stencil2D`` fully periodic), outputs chained into inputs.
+        """
+        return self._reference(state, tuple(regs), m=m)
+
+    def _reference_impl(self, state, regs, *, m: int):
+        outs = [state[i] for i in range(len(self._ports))]
+        for _ in range(m):
+            outs = self.compiled.apply(list(outs) + list(regs))
+        return jnp.stack(
+            [jnp.asarray(o, state.dtype) for o in outs[:len(self._ports)]]
+        )
+
+    def pack(self, arrays: Sequence) -> jnp.ndarray:
+        """Stack per-port (H, W) grids into the kernel's (P, H, W) state."""
+        if len(arrays) != len(self._ports):
+            raise CodegenError(
+                f"expected {len(self._ports)} main-stream fields "
+                f"{self._ports}, got {len(arrays)}"
+            )
+        return jnp.stack([jnp.asarray(a, jnp.float32) for a in arrays])
+
+
+__all__ = [
+    "CodegenError",
+    "StencilSummary",
+    "StreamKernel",
+    "stencil_summary",
+]

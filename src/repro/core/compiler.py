@@ -5,7 +5,9 @@ a JAX dataflow function: EQU nodes become ``jnp`` expression trees, HDL nodes
 become library-module or (recursively) sub-core calls, and DRCT lines become
 wiring. The pipeline *timing* side (delay balancing, depth) is computed by
 ``repro.core.dfg.schedule`` and retained as the hardware performance model
-that drives design-space exploration.
+that drives design-space exploration (docs/pipeline.md §compile). One
+level further down, ``repro.core.codegen`` lowers the same core to an
+executable Pallas stream kernel (docs/pipeline.md §codegen).
 """
 
 from __future__ import annotations
@@ -129,6 +131,9 @@ class HardwareReport:
     buffer_bits: int  # stencil/delay buffer bits (BRAM analogue)
     stream_in_words: int  # main-input words per element (bandwidth model)
     stream_out_words: int
+    # Per-step stencil reach in rows (codegen inference, DESIGN.md §7);
+    # drives the TPU model's stripe residency and the kernel legalizer.
+    halo: int = 1
 
     def workload(self, elems: int, grid_w: int = 0):
         """Bind this report to a stream length -> DSE ``StreamWorkload``.
@@ -200,6 +205,21 @@ class CompiledCore:
         return total
 
     @cached_property
+    def stream_halo(self) -> int:
+        """Per-step stencil reach in rows, from the codegen's DFG inference.
+
+        Cores the stream codegen cannot analyze (1-D stream state and
+        other docs/pipeline.md §codegen rejections) fall back to 1 — the
+        LBM-like default — so DSE modeling stays available for them.
+        """
+        from .codegen import stencil_summary
+
+        try:
+            return stencil_summary(self).halo_y
+        except SPDError:
+            return 1
+
+    @cached_property
     def hardware_report(self) -> HardwareReport:
         s = self.schedule
         return HardwareReport(
@@ -211,6 +231,7 @@ class CompiledCore:
             buffer_bits=self.buffer_bits,
             stream_in_words=len(self.core.main_input_ports()),
             stream_out_words=len(self.core.main_output_ports()),
+            halo=self.stream_halo,
         )
 
     def stream_workload(self, elems: int, grid_w: int = 0):
@@ -218,10 +239,29 @@ class CompiledCore:
         return self.hardware_report.workload(elems, grid_w)
 
     def explorer(self, elems: int, grid_w: int = 0, **kw):
-        """Design-space :class:`~repro.core.explorer.Explorer` of this core."""
+        """Design-space :class:`~repro.core.explorer.Explorer` of this core.
+
+        The explorer keeps a reference to the core, so TPU frontier
+        points can be *executed* through the codegen'd stream kernel
+        (``Explorer.execute_frontier``, docs/pipeline.md §execute).
+        """
         from .explorer import Explorer
 
-        return Explorer(self.hardware_report, elems=elems, grid_w=grid_w, **kw)
+        return Explorer(self, elems=elems, grid_w=grid_w, **kw)
+
+    def stream_kernel(self):
+        """Lower this core to a temporal-blocking Pallas stream kernel.
+
+        The SPD→Pallas codegen path (docs/pipeline.md §codegen): stencil
+        offsets are inferred from this core's DFG and the dataflow
+        function is re-lowered over VMEM row stripes. Raises
+        :class:`~repro.core.codegen.CodegenError` for cores the stream
+        target cannot express (branch streams, 1-D stream state,
+        non-periodic stencils).
+        """
+        from .codegen import StreamKernel
+
+        return StreamKernel(self)
 
     # ---- execution -----------------------------------------------------------
 

@@ -7,7 +7,8 @@ depth computation, and the floating-point-operator census that feeds the
 design-space-exploration cost model (``N_Flops`` in the paper's Eq. 10).
 
 The *semantic* compilation of a core to a JAX function lives in
-``repro.core.compiler``; here we only reason about structure and timing.
+``repro.core.compiler``; here we only reason about structure and timing
+(stage two of the pipeline, docs/pipeline.md §dfg).
 """
 
 from __future__ import annotations

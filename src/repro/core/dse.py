@@ -39,6 +39,8 @@ from typing import Iterable, Sequence
 
 import numpy as np
 
+from .legalize import VMEM_BYTES, VMEM_DOUBLE_BUFFER
+
 # --------------------------------------------------------------------------
 # Workload description
 # --------------------------------------------------------------------------
@@ -56,6 +58,11 @@ class StreamWorkload:
     buffer_bits: int  # stencil buffer bits of one PE
     elems: int  # stream length T (paper grid: 720*300)
     grid_w: int = 0  # row width (2-D workloads; drives lane-shared buffers)
+    # Per-step stencil reach in rows (repro.core.codegen inference; 1 for
+    # LBM, 0 for elementwise cores). The TPU model's stripe residency and
+    # halo-recompute terms use it, so the model and the kernel legalizer
+    # (repro.core.legalize) account the same stripe geometry.
+    halo: int = 1
 
     @classmethod
     def from_report(cls, report, elems: int, grid_w: int = 0) -> "StreamWorkload":
@@ -68,6 +75,7 @@ class StreamWorkload:
             buffer_bits=report.buffer_bits,
             elems=elems,
             grid_w=grid_w,
+            halo=getattr(report, "halo", 1),
         )
 
 
@@ -350,7 +358,10 @@ class TPUTarget:
     # Assumed VPU f32 throughput; configurable, stated in EXPERIMENTS.md.
     vpu_f32_tflops: float = 4.9
     hbm_gbs: float = 819.0
-    vmem_bytes: int = 128 * 1024 * 1024
+    # Shared with the kernel legalizer (repro.core.legalize): the model's
+    # VMEM feasibility mask and blocking_plan's stripe clamp read the same
+    # budget, so a model-feasible point is never shrunk at run time.
+    vmem_bytes: int = VMEM_BYTES
     ici_gbs_per_link: float = 50.0
     hbm_bytes_per_chip: int = 16 * 2**30
     # Simple per-chip power model for the perf/W frontier axis: idle floor
@@ -387,23 +398,26 @@ class TPUModel:
         grid_w = w.grid_w or int(math.sqrt(w.elems))
         bytes_per_elem = 4 * (w.words_in + w.words_out)
 
-        # VMEM residency: (bh + 2m) rows x width x state words, x2 if the
-        # pipeline double-buffers the next block's DMA.
-        rows = bh + 2 * m
-        vmem = rows * grid_w * w.words_in * 4 * (2 if double_buffer else 1)
+        # VMEM residency: (bh + 2·m·halo) rows x width x state words, x2 if
+        # the pipeline double-buffers the next block's DMA — the same stripe
+        # geometry repro.core.legalize clamps against, so a feasible point
+        # is never silently shrunk at run time.
+        rows = bh + 2 * m * w.halo
+        vmem = (rows * grid_w * w.words_in * 4
+                * (VMEM_DOUBLE_BUFFER if double_buffer else 1))
         if vmem > t.vmem_bytes:
             pt.feasible = False
             pt.limits.append(f"VMEM {vmem}>{t.vmem_bytes}")
 
-        # Halo overhead: the 2m halo rows are recomputed per block.
-        useful = bh / (bh + 2 * m)
+        # Halo overhead: the 2·m·halo halo rows are recomputed per block.
+        useful = bh / (bh + 2 * m * w.halo)
         flops = w.elems * w.flops_per_elem * m / useful  # incl. recompute
         t_compute = flops / (n_chips * t.vpu_f32_tflops * 1e12)
         t_memory = w.elems * bytes_per_elem / (n_chips * t.hbm_gbs * 1e9)
-        # Cross-chip halo exchange (spatial split): 2m rows per neighbor.
+        # Cross-chip halo exchange (spatial split): 2·m·halo rows/neighbor.
         halo_bytes = 0.0
         if n_chips > 1:
-            halo_bytes = 2 * 2 * m * grid_w * w.words_in * 4
+            halo_bytes = 2 * 2 * m * w.halo * grid_w * w.words_in * 4
         t_coll = halo_bytes / (t.ici_gbs_per_link * 1e9)
 
         step_time = max(t_compute, t_memory, t_coll)
@@ -456,16 +470,17 @@ class TPUModel:
         grid_w = w.grid_w or int(math.sqrt(w.elems))
         bytes_per_elem = 4 * (w.words_in + w.words_out)
 
-        rows = bh + 2 * m
-        vmem = rows * grid_w * w.words_in * 4 * (2 if double_buffer else 1)
+        rows = bh + 2 * m * w.halo
+        vmem = (rows * grid_w * w.words_in * 4
+                * (VMEM_DOUBLE_BUFFER if double_buffer else 1))
         feasible = vmem <= t.vmem_bytes
 
-        useful = bh / (bh + 2 * m)
+        useful = bh / (bh + 2 * m * w.halo)
         flops = w.elems * w.flops_per_elem * m / useful
         t_compute = flops / (chips * t.vpu_f32_tflops * 1e12)
         t_memory = w.elems * bytes_per_elem / (chips * t.hbm_gbs * 1e9)
         halo_bytes = np.where(
-            chips > 1, 2.0 * 2 * m * grid_w * w.words_in * 4, 0.0
+            chips > 1, 2.0 * 2 * m * w.halo * grid_w * w.words_in * 4, 0.0
         )
         t_coll = halo_bytes / (t.ici_gbs_per_link * 1e9)
 

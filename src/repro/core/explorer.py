@@ -1,7 +1,8 @@
 """Design-space explorer: batched lattice sweeps -> Pareto frontier -> run.
 
-This is the executable form of the paper's §III workflow (DESIGN.md §5).
-Where :mod:`repro.core.dse` models one (n, m) point at a time, the explorer
+This is the executable form of the paper's §III workflow (DESIGN.md §5,
+docs/pipeline.md §execute). Where :mod:`repro.core.dse` models one (n, m)
+point at a time, the explorer
 
 1. enumerates the full coordinate lattice for a compiled SPD core —
    (n, m) for the FPGA target, (block_h, m, chips) for the TPU target —
@@ -9,9 +10,13 @@ Where :mod:`repro.core.dse` models one (n, m) point at a time, the explorer
    (:meth:`FPGAModel.evaluate_batch` / :meth:`TPUModel.evaluate_batch`);
 2. extracts the Pareto frontier over (throughput, perf/W, resource use)
    with a vectorized dominance check (:func:`pareto_mask`);
-3. for the TPU target, *executes* the top-k frontier points through the
-   real ``lbm_stream`` Pallas kernel (interpret mode off-TPU) and reports
-   predicted-vs-measured error per point (:func:`execute_frontier`).
+3. for the TPU target, *executes* the top-k frontier points through a
+   real Pallas kernel (interpret mode off-TPU) and reports
+   predicted-vs-measured error per point. Any codegen'd SPD core runs via
+   :meth:`Explorer.execute_frontier` (the generic
+   ``repro.core.codegen`` path); the hand-written ``lbm_stream``
+   kernel keeps the module-level :func:`execute_frontier` entry. Both
+   legalize plans through the shared :mod:`repro.core.legalize`.
 
 The paper's "find the best among them" result — (n, m) = (1, 4) on the
 Stratix V — falls out of ``Explorer.sweep_fpga(...).best()`` and is
@@ -204,7 +209,10 @@ class Explorer:
     ``source`` may be a :class:`StreamWorkload`, a
     :class:`~repro.core.compiler.HardwareReport`, or anything with a
     ``hardware_report`` attribute (``CompiledCore``, ``LBMSimulation``);
-    for the latter two, ``elems`` (stream length) must be given.
+    for the latter two, ``elems`` (stream length) must be given. When the
+    source is (or ``core`` names) a compiled core, TPU frontier points
+    can be executed through its codegen'd Pallas kernel with
+    :meth:`execute_frontier` (docs/pipeline.md §execute).
     """
 
     def __init__(
@@ -215,12 +223,18 @@ class Explorer:
         fpga: FPGAModel | None = None,
         tpu: TPUModel | None = None,
         census: dict | None = None,
+        core=None,
     ):
+        from .compiler import CompiledCore
+
         self.workload = _as_workload(source, elems, grid_w)
         self.fpga = fpga or FPGAModel()
         self.tpu = tpu or TPUModel()
         report = getattr(source, "hardware_report", source)
         self.census = census or getattr(report, "census", None)
+        self.core = core if core is not None else (
+            source if isinstance(source, CompiledCore) else None
+        )
 
     # ---- lattice sweeps ----------------------------------------------------
 
@@ -269,6 +283,57 @@ class Explorer:
             return self.sweep_tpu(**kw)
         raise ValueError(f"unknown target {target!r} (want 'fpga' or 'tpu')")
 
+    # ---- model -> measurement (any codegen'd core) -------------------------
+
+    def execute_frontier(
+        self,
+        sweep: "Sweep",
+        state,
+        regs: Sequence = (),
+        core=None,
+        k: int = 3,
+        steps: int | None = None,
+        interpret: bool = True,
+        reps: int = 1,
+    ) -> list["ExecutedPoint"]:
+        """Run top-k TPU frontier points through a codegen'd stream kernel.
+
+        ``core`` (default: the compiled core this explorer was built
+        from) may be a :class:`~repro.core.compiler.CompiledCore` or an
+        already-lowered :class:`~repro.core.codegen.StreamKernel`;
+        ``state`` is the stacked ``(P, H, W)`` grid and ``regs`` the
+        core's ``Append_Reg`` values. Each point's (block_h, m) is
+        legalized with the kernel's inferred halo and executed via
+        ``repro.kernels.spd_stream`` — the generic path any SPD core can
+        take, not just the hand-written LBM kernel
+        (docs/pipeline.md §execute).
+        """
+        from .codegen import StreamKernel
+
+        core = core if core is not None else self.core
+        if core is None:
+            raise ValueError(
+                "Explorer.execute_frontier needs a compiled core: build "
+                "the explorer from a CompiledCore or pass core=..."
+            )
+        kern = core if isinstance(core, StreamKernel) else core.stream_kernel()
+        p, h, w = state.shape
+
+        def make_run(nsteps: int, m: int, block_h: int):
+            def run():
+                return kern.run_blocked(
+                    state, regs, steps=nsteps, m=m, block_h=block_h,
+                    interpret=interpret,
+                )
+
+            return run
+
+        return _time_frontier(
+            sweep, make_run, h=h, w=w, k=k, steps=steps,
+            interpret=interpret, reps=reps, halo=kern.halo,
+            width=w, words=p,
+        )
+
 
 # --------------------------------------------------------------------------
 # Model -> measurement loop (TPU target only: the kernel we actually ship)
@@ -291,47 +356,44 @@ class ExecutedPoint:
     interpret: bool
 
 
-def execute_frontier(
+def _time_frontier(
     sweep: Sweep,
-    f,
-    attr,
-    one_tau: float,
-    u_lid: float = 0.0,
-    k: int = 3,
-    steps: int | None = None,
-    interpret: bool = True,
-    reps: int = 1,
+    make_run,
+    h: int,
+    w: int,
+    k: int,
+    steps: int | None,
+    interpret: bool,
+    reps: int,
+    halo: int = 1,
+    width: int = 0,
+    words: int = 0,
 ) -> list[ExecutedPoint]:
-    """Run the top-k Pareto points of a TPU sweep through ``lbm_stream``.
+    """Shared measurement loop behind both frontier-execution entries.
 
-    Each point's (block_h, m) is clamped onto the concrete grid with
-    :func:`repro.kernels.lbm_stream.ops.blocking_plan`, timed over ``reps``
-    measured calls (after one compile/warm-up call), and compared against
-    the model's predicted sustained GFlop/s. Off-TPU, ``interpret=True``
-    runs the kernel through the Pallas interpreter — the numerics are the
-    kernel's, the wall clock is the host's, so expect large ``rel_error``
-    there; on real TPU hardware pass ``interpret=False``.
+    ``make_run(nsteps, m, block_h)`` returns a nullary callable that
+    advances the grid; each top-k Pareto point is legalized through the
+    shared :func:`repro.core.legalize.resolve_run_plan` (with the
+    kernel's ``halo`` and, when given, the VMEM stripe clamp), timed
+    over ``reps`` measured calls after one compile/warm-up call, and
+    compared against the model's predicted sustained GFlop/s.
     """
     import jax
 
-    from repro.kernels.lbm_stream.ops import lbm_run_blocked, resolve_run_plan
+    from .legalize import resolve_run_plan
 
     if sweep.target != "tpu":
         raise ValueError(
             "execute_frontier needs a TPU sweep (the FPGA target is a model "
             "only; there is no Stratix V attached)"
         )
-    h, w = f.shape[1], f.shape[2]
     flops_per_elem = sweep.workload.flops_per_elem
     out: list[ExecutedPoint] = []
     for pt in sweep.frontier()[:k]:
-        block_h, m, nsteps = resolve_run_plan(h, pt, steps)
-
-        def run():
-            return lbm_run_blocked(
-                f, attr, one_tau, u_lid,
-                steps=nsteps, m=m, block_h=block_h, interpret=interpret,
-            )
+        block_h, m, nsteps = resolve_run_plan(
+            h, pt, steps, halo=halo, width=width, words=words,
+        )
+        run = make_run(nsteps, m, block_h)
 
         jax.block_until_ready(run())  # compile + warm
         t0 = time.perf_counter()
@@ -359,6 +421,48 @@ def execute_frontier(
             )
         )
     return out
+
+
+def execute_frontier(
+    sweep: Sweep,
+    f,
+    attr,
+    one_tau: float,
+    u_lid: float = 0.0,
+    k: int = 3,
+    steps: int | None = None,
+    interpret: bool = True,
+    reps: int = 1,
+) -> list[ExecutedPoint]:
+    """Run the top-k Pareto points of a TPU sweep through ``lbm_stream``.
+
+    The hand-written-kernel entry (the generic codegen path is
+    :meth:`Explorer.execute_frontier`). Each point's (block_h, m) is
+    clamped onto the concrete grid with the shared
+    :func:`repro.core.legalize.blocking_plan`, timed over ``reps``
+    measured calls (after one compile/warm-up call), and compared against
+    the model's predicted sustained GFlop/s. Off-TPU, ``interpret=True``
+    runs the kernel through the Pallas interpreter — the numerics are the
+    kernel's, the wall clock is the host's, so expect large ``rel_error``
+    there; on real TPU hardware pass ``interpret=False``.
+    """
+    from repro.kernels.lbm_stream.ops import lbm_run_blocked
+
+    h, w = f.shape[1], f.shape[2]
+
+    def make_run(nsteps: int, m: int, block_h: int):
+        def run():
+            return lbm_run_blocked(
+                f, attr, one_tau, u_lid,
+                steps=nsteps, m=m, block_h=block_h, interpret=interpret,
+            )
+
+        return run
+
+    return _time_frontier(
+        sweep, make_run, h=h, w=w, k=k, steps=steps, interpret=interpret,
+        reps=reps,
+    )
 
 
 def render_executed(points: Sequence[ExecutedPoint]) -> str:

@@ -1,0 +1,118 @@
+"""Shared (block_h, m) legalization for temporal-blocking stream kernels.
+
+A design point chosen by the analytic models (`repro.core.dse`) is
+grid-agnostic: the sweep lattice may propose a block height that does not
+divide the concrete grid, a fused-step count the halo cannot source, or a
+stripe that overflows VMEM. Both kernel back ends — the hand-written
+``repro.kernels.lbm_stream`` and the generic SPD codegen path
+``repro.kernels.spd_stream`` — legalize through the functions here, so
+model and measurement always agree on what "the closest legal plan" means
+(docs/pipeline.md §legalize).
+
+``VMEM_BYTES`` is the single definition of the on-chip vector-memory
+budget: the DSE model's :class:`~repro.core.dse.TPUTarget` feasibility
+check and the legalizer's stripe clamp both read it, so a point the model
+calls feasible is one the legalizer will not shrink.
+"""
+
+from __future__ import annotations
+
+#: TPU v5e on-chip vector memory (VMEM) capacity in bytes. Single source of
+#: truth for the DSE model (``TPUTarget.vmem_bytes``) and the legalizer.
+VMEM_BYTES = 128 * 1024 * 1024
+
+#: The pipelined kernels double-buffer the next block's DMA, so a stripe
+#: effectively occupies twice its size. Shared with ``TPUModel``.
+VMEM_DOUBLE_BUFFER = 2
+
+
+def stripe_vmem_bytes(block_h: int, m: int, width: int, words: int,
+                      halo: int = 1,
+                      double_buffer: bool = True) -> int:
+    """VMEM bytes of one (block_h + 2·m·halo)-row f32 stripe of ``words``
+    fields, matching the residency term of ``TPUModel.evaluate``."""
+    rows = block_h + 2 * m * halo
+    mult = VMEM_DOUBLE_BUFFER if double_buffer else 1
+    return rows * max(width, 1) * max(words, 1) * 4 * mult
+
+
+def blocking_plan(h: int, block_h: int, m: int, *, halo: int = 1,
+                  width: int = 0, words: int = 0,
+                  vmem_bytes: int = VMEM_BYTES) -> tuple[int, int]:
+    """Legalize a model-chosen (block_h, m) for a grid of ``h`` rows.
+
+    The temporal-blocking kernels require ``block_h | h`` and
+    ``m * halo <= block_h`` (the y-halo is sourced from one neighbor
+    stripe per side; ``halo`` is the per-step stencil reach inferred by
+    ``repro.core.codegen``, 1 for the LBM kernel). The model's lattice is
+    grid-agnostic, so its pick may violate either; this returns the
+    closest legal plan: the largest divisor of ``h`` that is <= the
+    requested block (or the smallest one >= m*halo when the request is
+    too small), with ``m`` clamped into [1, h].
+
+    When ``width``/``words`` are supplied the plan is additionally kept
+    under the shared VMEM budget (:data:`VMEM_BYTES`): only legal
+    divisors whose stripe fits are considered — the same residency
+    arithmetic ``TPUModel`` uses for its feasibility mask — and a
+    ``ValueError`` is raised when none does (better than an opaque
+    on-device VMEM allocation failure).
+    """
+    if h < 1:
+        raise ValueError(f"grid height must be positive, got {h}")
+    halo = max(0, int(halo))
+    m = max(1, min(int(m), h))
+    floor = max(1, m * halo)
+    divisors = [d for d in range(1, h + 1) if h % d == 0]
+    legal = [d for d in divisors if d >= floor]
+    while not legal and m > 1:  # m*halo exceeds the grid: shrink m
+        m -= 1
+        floor = max(1, m * halo)
+        legal = [d for d in divisors if d >= floor]
+    if not legal:  # even one fused step cannot source its halo
+        raise ValueError(
+            f"stencil halo {halo} cannot be sourced on a grid of h={h} "
+            f"rows (needs a block of >= {halo} rows dividing h)"
+        )
+    if width and words:
+        fits = [
+            d for d in legal
+            if stripe_vmem_bytes(d, m, width, words, halo) <= vmem_bytes
+        ]
+        if not fits:  # no legal block fits: fail loudly, not on-device
+            smallest = min(legal)
+            raise ValueError(
+                f"no legal block for h={h} fits VMEM: smallest stripe "
+                f"(block_h={smallest}, m={m}, halo={halo}) needs "
+                f"{stripe_vmem_bytes(smallest, m, width, words, halo)} B "
+                f"> budget {vmem_bytes} B"
+            )
+        legal = fits
+    under = [d for d in legal if d <= block_h]
+    return (max(under) if under else min(legal)), m
+
+
+def resolve_run_plan(h: int, point, steps: int | None = None, *,
+                     halo: int = 1, width: int = 0,
+                     words: int = 0) -> tuple[int, int, int]:
+    """Turn a DSE design point into a concrete (block_h, m, steps) plan.
+
+    ``point`` is any object with ``m`` and ``detail['block_rows']`` (a
+    :class:`repro.core.dse.DesignPoint` from a TPU sweep). The blocking is
+    legalized with :func:`blocking_plan`; ``steps`` defaults to one fused
+    launch (m steps) and is rounded down to a multiple of m.
+    """
+    block_h, m = blocking_plan(
+        h, int(point.detail["block_rows"]), int(point.m),
+        halo=halo, width=width, words=words,
+    )
+    nsteps = m if steps is None else max(m, (steps // m) * m)
+    return block_h, m, nsteps
+
+
+__all__ = [
+    "VMEM_BYTES",
+    "VMEM_DOUBLE_BUFFER",
+    "blocking_plan",
+    "resolve_run_plan",
+    "stripe_vmem_bytes",
+]

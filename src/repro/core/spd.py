@@ -14,6 +14,11 @@ Accepts the paper's syntax (Figs. 4, 5, 6, 8, 10, 11 and Tables I/II):
 Strings after '#' are comments; statements may span lines and end with ';'.
 Formulae support + - * / unary-minus, parentheses, numeric literals, named
 parameters, and calls (sqrt, abs, min, max, rsqrt, exp).
+
+This is the first stage of the compilation pipeline
+(docs/pipeline.md §parse); the complete grammar, statement by statement,
+is docs/spd_reference.md (whose snippets are parsed by this module in
+``tests/test_docs.py``).
 """
 
 from __future__ import annotations

@@ -2,6 +2,10 @@
 
 * ``lbm_stream``      — fused m-step D2Q9 LBM temporal blocking (the
                         paper's cascaded-PE analogue in VMEM)
+* ``spd_stream``      — the generic form of the same structure: the
+                        Pallas launch target that ``repro.core.codegen``
+                        lowers *any* compiled SPD core onto
+                        (docs/pipeline.md §codegen)
 * ``flash_attention`` — blocked online-softmax attention (causal / sliding
                         window / GQA)
 

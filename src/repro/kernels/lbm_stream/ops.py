@@ -1,7 +1,10 @@
 """Public jit'd wrappers for the LBM temporal-blocking kernel, plus the
-explorer hand-off: :func:`blocking_plan` clamps a model-chosen
-(block_h, m) onto a concrete lattice and :func:`lbm_run_for_point` runs a
-``DesignPoint`` straight from a ``repro.core.explorer`` sweep."""
+explorer hand-off: :func:`lbm_run_for_point` runs a ``DesignPoint``
+straight from a ``repro.core.explorer`` sweep. Legalization of
+model-chosen (block_h, m) plans is shared with the generic SPD codegen
+path via :mod:`repro.core.legalize` (docs/pipeline.md §legalize); the
+LBM kernel's per-step stencil reach is one row, so ``halo=1`` (the
+default) applies."""
 
 from __future__ import annotations
 
@@ -9,42 +12,10 @@ import functools
 
 import jax
 
+from repro.core.legalize import blocking_plan, resolve_run_plan
+
 from .lbm_stream import lbm_multistep
 from .ref import lbm_multistep_ref
-
-
-def blocking_plan(h: int, block_h: int, m: int) -> tuple[int, int]:
-    """Legalize an explorer-chosen (block_h, m) for a grid of ``h`` rows.
-
-    The kernel requires ``block_h | h`` and ``m <= block_h`` (the halo is
-    sourced from one neighbor stripe per side). The model's lattice is
-    grid-agnostic, so its pick may violate either; this returns the
-    closest legal plan: the largest divisor of ``h`` that is <= the
-    requested block (or the smallest one >= m when the request is too
-    small), with ``m`` clamped into [1, h].
-    """
-    if h < 1:
-        raise ValueError(f"grid height must be positive, got {h}")
-    m = max(1, min(int(m), h))
-    divisors = [d for d in range(1, h + 1) if h % d == 0]
-    legal = [d for d in divisors if d >= m]
-    under = [d for d in legal if d <= block_h]
-    return (max(under) if under else min(legal)), m
-
-
-def resolve_run_plan(h: int, point, steps: int | None = None
-                     ) -> tuple[int, int, int]:
-    """Turn a DSE design point into a concrete (block_h, m, steps) plan.
-
-    ``point`` is any object with ``m`` and ``detail['block_rows']`` (a
-    :class:`repro.core.dse.DesignPoint` from a TPU sweep). The blocking is
-    legalized with :func:`blocking_plan`; ``steps`` defaults to one fused
-    launch (m steps) and is rounded down to a multiple of m.
-    """
-    block_h, m = blocking_plan(h, int(point.detail["block_rows"]),
-                               int(point.m))
-    nsteps = m if steps is None else max(m, (steps // m) * m)
-    return block_h, m, nsteps
 
 
 def lbm_run_for_point(f, attr, one_tau, point, *, steps: int | None = None,

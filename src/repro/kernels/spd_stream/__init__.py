@@ -1,0 +1,11 @@
+"""Generic SPD→Pallas temporal-blocking stream kernels.
+
+Where :mod:`repro.kernels.lbm_stream` is the hand-written kernel for one
+application, this package is the *codegen target*: `repro.core.codegen`
+lowers any compiled SPD core into the stripe-update function that
+:func:`spd_multistep` launches on the TPU grid (docs/pipeline.md §codegen).
+"""
+
+from .ops import spd_multistep, stream_run_blocked
+
+__all__ = ["spd_multistep", "stream_run_blocked"]

@@ -1,16 +1,44 @@
-"""Docs stay wired to the code: every ``DESIGN.md §…`` reference in src/
-must resolve to a real section anchor in DESIGN.md."""
+"""Docs stay wired to the code.
 
+* every ``DESIGN.md §…`` / ``docs/<name>.md §…`` reference in a src/
+  docstring must resolve to a real section anchor in that file;
+* every anchor docs/pipeline.md defines must be *cited* by at least one
+  src/ docstring (the pipeline doc describes real stages, not vapor);
+* every fenced ``spd`` snippet in docs/*.md must parse via the real
+  parser, ``repro.core.spd`` (fragments get a ``Name`` prepended).
+"""
+
+import glob
 import os
 import re
 
 ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
-REF_RE = re.compile(r"DESIGN\.md\s+(§[\w-]+)")
+REF_RE = re.compile(r"(DESIGN\.md|docs/[\w-]+\.md)\s+(§[\w-]+)")
 ANCHOR_RE = re.compile(r"^#+\s+(§[\w-]+)", re.MULTILINE)
+SPD_SNIPPET_RE = re.compile(r"```spd\n(.*?)```", re.DOTALL)
+
+
+def _doc_files() -> list[str]:
+    """Anchor-bearing docs, as repo-relative paths (the citation form)."""
+    docs = ["DESIGN.md"] + sorted(
+        os.path.relpath(p, ROOT).replace(os.sep, "/")
+        for p in glob.glob(os.path.join(ROOT, "docs", "*.md"))
+    )
+    return docs
+
+
+def _read(rel: str) -> str:
+    with open(os.path.join(ROOT, rel), encoding="utf-8") as fh:
+        return fh.read()
+
+
+def _anchors(rel: str) -> set[str]:
+    return set(ANCHOR_RE.findall(_read(rel)))
 
 
 def _src_refs():
+    """All (src file, doc, anchor) citations found under src/."""
     refs = []
     for dirpath, _, files in os.walk(os.path.join(ROOT, "src")):
         for name in files:
@@ -18,28 +46,72 @@ def _src_refs():
                 continue
             path = os.path.join(dirpath, name)
             with open(path, encoding="utf-8") as fh:
-                for anchor in REF_RE.findall(fh.read()):
-                    refs.append((os.path.relpath(path, ROOT), anchor))
+                for doc, anchor in REF_RE.findall(fh.read()):
+                    refs.append((os.path.relpath(path, ROOT), doc, anchor))
     return refs
 
 
-def test_design_md_exists():
-    assert os.path.exists(os.path.join(ROOT, "DESIGN.md"))
+def test_doc_files_exist():
+    for rel in ["DESIGN.md", "docs/pipeline.md", "docs/spd_reference.md"]:
+        assert os.path.exists(os.path.join(ROOT, rel)), rel
 
 
-def test_every_design_ref_resolves():
-    with open(os.path.join(ROOT, "DESIGN.md"), encoding="utf-8") as fh:
-        anchors = set(ANCHOR_RE.findall(fh.read()))
-    assert anchors, "DESIGN.md has no § section anchors"
+def test_every_doc_ref_resolves():
+    """src/ docstrings may only cite anchors that actually exist."""
+    anchors = {rel: _anchors(rel) for rel in _doc_files()}
+    assert anchors["DESIGN.md"], "DESIGN.md has no § section anchors"
     refs = _src_refs()
-    assert refs, "expected DESIGN.md references in src/ docstrings"
-    missing = [(f, a) for f, a in refs if a not in anchors]
-    assert not missing, f"unresolved DESIGN.md references: {missing}"
+    assert refs, "expected doc references in src/ docstrings"
+    missing = [
+        (f, doc, a)
+        for f, doc, a in refs
+        if a not in anchors.get(doc, set())
+    ]
+    assert not missing, f"unresolved doc references: {missing}"
+
+
+def test_pipeline_anchors_all_cited_from_src():
+    """docs/pipeline.md describes the real pipeline: every stage anchor
+    it defines is cited by at least one src/ docstring."""
+    defined = _anchors("docs/pipeline.md")
+    assert defined, "docs/pipeline.md has no § stage anchors"
+    cited = {a for _, doc, a in _src_refs() if doc == "docs/pipeline.md"}
+    uncited = defined - cited
+    assert not uncited, (
+        f"docs/pipeline.md anchors never cited from src/: {sorted(uncited)}"
+    )
+
+
+def test_spd_reference_snippets_parse():
+    """Every ```spd fence in docs/ parses through the real front end."""
+    from repro.core.spd import parse_spd
+
+    total = 0
+    for rel in _doc_files():
+        if not rel.startswith("docs/"):
+            continue
+        for i, snippet in enumerate(SPD_SNIPPET_RE.findall(_read(rel))):
+            if not re.search(r"^\s*Name\b", snippet, re.MULTILINE):
+                snippet = "Name snippet;\n" + snippet  # statement fragment
+            try:
+                core = parse_spd(snippet)
+            except Exception as e:  # pragma: no cover - failure reporting
+                raise AssertionError(
+                    f"{rel} spd snippet #{i} does not parse: {e}\n{snippet}"
+                ) from e
+            assert core.name
+            total += 1
+    assert total >= 10, f"expected a real grammar reference, got {total} snippets"
 
 
 def test_readme_quickstart_matches_roadmap():
     """README's quickstart must carry the tier-1 command from ROADMAP.md."""
-    with open(os.path.join(ROOT, "README.md"), encoding="utf-8") as fh:
-        readme = fh.read()
+    readme = _read("README.md")
     assert "python -m pytest -x -q" in readme
     assert "PYTHONPATH=src" in readme
+
+
+def test_readme_links_pipeline_docs():
+    readme = _read("README.md")
+    assert "docs/pipeline.md" in readme
+    assert "docs/spd_reference.md" in readme
