@@ -4,31 +4,63 @@ driven end-to-end by ``repro.core.explorer``:
 1. FPGA target: the full (n, m) lattice evaluated in one batched call,
    Pareto frontier over (throughput, perf/W, resources), and the paper's
    winning configuration (n, m) = (1, 4) recovered by ``best()``.
-2. TPU v5e target: the (block_h, m) temporal-blocking lattice, its
-   frontier, and — the model<->measurement loop — the top-k frontier
-   points *executed* through the real ``lbm_stream`` Pallas kernel with
-   predicted-vs-measured error per point. Off-TPU this runs the Pallas
-   interpreter, so the error column mostly reflects host-vs-TPU speed;
-   on real hardware pass interpret=False for a meaningful diff.
+2. TPU v5e target: the (block_h, m, d) temporal-blocking lattice — d is
+   the device axis (y-sharding with halo exchange,
+   ``repro.core.distribute``) — its frontier, and the model<->measurement
+   loop: the top-k frontier points *executed* through the codegen'd uLBM
+   Pallas kernel via the single timing path
+   (``Explorer.execute_frontier``); d > 1 points run sharded when the
+   platform has the devices and are skipped otherwise. Off-TPU this runs
+   the Pallas interpreter, so the error column mostly reflects
+   host-vs-TPU speed; on real hardware pass interpret=False for a
+   meaningful diff.
 3. LM mesh planner: (dp, tp, pp) ranking for a transformer arch — the
    paper's spatial/temporal trade lifted to the fleet (DESIGN.md §4).
+
+Invoked as a script this also writes ``BENCH_dse.json`` next to the repo
+root — best point, sustained GFLOPS, and predicted-vs-measured error per
+app — so the performance trajectory is recorded across PRs.
 """
 
 from __future__ import annotations
 
+import json
+import os
 import time
 
 from repro.apps import lbm
-from repro.core.explorer import execute_frontier, render_executed
+from repro.core.explorer import render_executed
 from repro.core.planner import ArchStats, plan, render_plans
 from repro.configs import get_arch
 
 # Interpret-mode execution is host-speed; measure on a small lattice so the
-# whole benchmark stays in seconds. The kernel numerics are unchanged.
-MEASURE_H, MEASURE_W = 64, 128
+# whole benchmark stays in seconds — but tall enough (256 rows) that the
+# model puts d > 1 points on the frontier (on a short grid the halo
+# exchange dominates and sharding is correctly dominated).
+MEASURE_H, MEASURE_W = 256, 128
+
+BENCH_PATH = os.path.join(
+    os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+    "BENCH_dse.json",
+)
 
 
-def run(topk: int = 3, interpret: bool = True) -> list[str]:
+def _executed_record(e) -> dict:
+    return {
+        "block_h": int(e.block_h),
+        "m": int(e.m),
+        "d": int(e.d),
+        "predicted_gflops": float(e.predicted_gflops),
+        "measured_gflops": float(e.measured_gflops),
+        "measured_mlups": float(e.measured_mlups),
+        "rel_error": float(e.rel_error),
+        "interpret": bool(e.interpret),
+    }
+
+
+def run(topk: int = 3, interpret: bool = True,
+        bench: dict | None = None) -> list[str]:
+    """Print the sweep sections; fill ``bench`` (if given) for the JSON."""
     out = []
     t0 = time.time()
     sim = lbm.LBMSimulation(lbm.LBMProblem(300, 720, mode="wrap"))
@@ -48,29 +80,42 @@ def run(topk: int = 3, interpret: bool = True) -> list[str]:
         f"{best.perf_per_watt:.3f} GF/sW (paper: (1,4) -> 2.416)"
     )
 
-    out.append("\n## DSE sweep 2: TPU v5e temporal blocking (block_h, m)")
+    out.append("\n## DSE sweep 2: TPU v5e temporal blocking (block_h, m, d)")
     tsweep = ex.sweep_tpu()
     out.append(tsweep.table(k=10))
     tbest = tsweep.best("sustained_gflops")
     out.append(
-        f"best: block_h={tbest.detail['block_rows']} m={tbest.m} -> "
-        f"{tbest.sustained_gflops:.0f} GF/s "
-        f"({tbest.utilization*100:.0f}% of VPU roof), "
+        f"best: block_h={tbest.detail['block_rows']} m={tbest.m} "
+        f"d={tbest.n} -> {tbest.sustained_gflops:.0f} GF/s "
+        f"({tbest.utilization*100:.0f}% of the {tbest.n}-chip VPU roof), "
         f"AI={tbest.detail['arithmetic_intensity']:.1f} flop/B"
     )
 
+    # The measured sweep only proposes device counts the platform can
+    # actually run: on a tall grid the model (correctly) drops d=1 off
+    # the frontier entirely, which would leave a single-device machine
+    # with nothing executable.
+    import jax
+
+    from repro.core.distribute import device_axis_values
+
+    exec_d = device_axis_values(min(4, jax.device_count()))
     out.append(
         f"\n## DSE sweep 2b: top-{topk} frontier points through the "
-        f"Pallas kernel ({MEASURE_H}x{MEASURE_W}, "
-        f"{'interpret' if interpret else 'tpu'} mode)"
+        f"codegen'd uLBM Pallas kernel ({MEASURE_H}x{MEASURE_W}, "
+        f"{'interpret' if interpret else 'tpu'} mode; d swept over "
+        f"{exec_d}, d>1 sharded)"
     )
-    mex = lbm.LBMSimulation(
+    msim = lbm.LBMSimulation(
         lbm.LBMProblem(MEASURE_H, MEASURE_W, mode="wrap")
-    ).explorer()
-    msweep = mex.sweep_tpu(bh_values=(8, 16, 32, 64), m_values=(1, 2, 4, 8))
+    )
+    mex = msim.explorer()
+    msweep = mex.sweep_tpu(bh_values=(8, 16, 32, 64), m_values=(1, 2, 4, 8),
+                           d_values=exec_d)
     f0, attr, _ = lbm.taylor_green_init(MEASURE_H, MEASURE_W)
-    runs = execute_frontier(
-        msweep, f0, attr, one_tau=1 / 0.8, k=topk, interpret=interpret
+    runs = mex.execute_frontier(
+        msweep, msim.stream_state(f0, attr), msim.stream_regs(),
+        k=topk, interpret=interpret,
     )
     out.append(render_executed(runs))
     if interpret:
@@ -88,7 +133,8 @@ def run(topk: int = 3, interpret: bool = True) -> list[str]:
 
     dsim = dif.DiffusionSimulation(MEASURE_H, MEASURE_W, alpha=0.2)
     dex = dsim.explorer()
-    dsweep = dex.sweep_tpu(bh_values=(8, 16, 32, 64), m_values=(1, 2, 4, 8))
+    dsweep = dex.sweep_tpu(bh_values=(8, 16, 32, 64), m_values=(1, 2, 4, 8),
+                           d_values=exec_d)
     u0, _ = dif.sine_init(MEASURE_H, MEASURE_W)
     druns = dex.execute_frontier(
         dsweep, dsim.state(u0), (dsim.alpha,), k=topk, interpret=interpret
@@ -109,13 +155,48 @@ def run(topk: int = 3, interpret: bool = True) -> list[str]:
     )
     plans = plan(stats, 256)
     out.append(render_plans(plans, top=8))
+    mlups = f"{runs[0].measured_mlups:.2f}" if runs else "n/a"
     out.append(
         f"dse_sweep,{(time.time()-t0)*1e6:.0f},"
         f"fpga_best=({best.n};{best.m});tpu_best_m={tbest.m};"
-        f"measured_mlups={runs[0].measured_mlups:.2f}"
+        f"tpu_best_d={tbest.n};"
+        f"measured_mlups={mlups}"
     )
+
+    if bench is not None:
+        bench["fpga"] = {
+            "best": {"n": int(best.n), "m": int(best.m),
+                     "sustained_gflops": float(best.sustained_gflops),
+                     "perf_per_watt": float(best.perf_per_watt)},
+            "paper_best": {"n": 1, "m": 4, "perf_per_watt": 2.416},
+        }
+        for name, sw, rr in (("lbm", msweep, runs),
+                             ("diffusion", dsweep, druns)):
+            b = sw.best("sustained_gflops")
+            bench[name] = {
+                "best": {"d": int(b.n), "m": int(b.m),
+                         "block_h": int(b.detail["block_rows"]),
+                         "sustained_gflops": float(b.sustained_gflops)},
+                "executed": [_executed_record(e) for e in rr],
+            }
+        bench["grid"] = [MEASURE_H, MEASURE_W]
+        bench["interpret"] = bool(interpret)
+    return out
+
+
+def write_bench(path: str = BENCH_PATH, topk: int = 3,
+                interpret: bool = True) -> list[str]:
+    """Run the sweeps and record ``BENCH_dse.json`` (the PR-over-PR
+    trajectory file: best point, sustained GFLOPS, and
+    predicted-vs-measured error per app)."""
+    bench: dict = {}
+    out = run(topk=topk, interpret=interpret, bench=bench)
+    with open(path, "w", encoding="utf-8") as fh:
+        json.dump(bench, fh, indent=2, sort_keys=True)
+        fh.write("\n")
+    out.append(f"[wrote {path}]")
     return out
 
 
 if __name__ == "__main__":
-    print("\n".join(run()))
+    print("\n".join(write_bench()))

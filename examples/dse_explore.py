@@ -11,9 +11,13 @@ with the same spatial/temporal trade-off:
 
 or, after ``pip install -e .``, simply ``repro-explore``. Use
 ``--no-execute`` to skip the (host-speed) interpret-mode kernel runs,
-``--topk`` to execute more frontier points. The implementation lives in
-:mod:`repro.cli` so the installed console script and this checkout
-script stay one code path.
+``--topk`` to execute more frontier points, ``--devices N`` to sweep the
+device axis d (multi-chip sharding with halo exchange; off-TPU force
+host devices with ``XLA_FLAGS=--xla_force_host_platform_device_count=N``
+so d > 1 frontier points actually run), and ``--json PATH`` to dump the
+results for scripting. The implementation lives in :mod:`repro.cli` so
+the installed console script and this checkout script stay one code
+path.
 """
 
 from repro.cli import explore_main

@@ -138,15 +138,21 @@ class DiffusionSimulation:
         return self.kernel.pack([u])
 
     def run(self, u, steps: int, *, m: int = 1, block_h: int | None = None,
-            interpret: bool = True):
-        """Advance ``steps`` diffusion steps through the Pallas kernel."""
+            interpret: bool = True, d: int = 1):
+        """Advance ``steps`` diffusion steps through the Pallas kernel.
+
+        ``d > 1`` shards the grid across that many devices with halo
+        exchange (docs/pipeline.md §distribute) — requires ``d``
+        available devices and ``d | height``.
+        """
         if block_h is None:
             from repro.core.legalize import blocking_plan
 
             block_h, m = blocking_plan(
-                self.height, 32, m, halo=self.kernel.halo,
+                self.height, 32, m, halo=self.kernel.halo, d=d,
             )
-        out = self.kernel.run_blocked(
+        kern = self.kernel if d == 1 else self.kernel.sharded(d)
+        out = kern.run_blocked(
             self.state(u), (self.alpha,), steps=steps, m=m,
             block_h=block_h, interpret=interpret,
         )

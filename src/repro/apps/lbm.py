@@ -335,6 +335,7 @@ class LBMSimulation:
         pe = self.registry._cores["PEx1"]
         self.pe = pe if m == 1 else temporal_cascade(pe, m)
         self._jitted = jax.jit(self._apply)
+        self._stream_kernel = None
 
     def _apply(self, f, attr):
         p = self.problem
@@ -367,11 +368,31 @@ class LBMSimulation:
 
     def explorer(self, **kw):
         """Design-space :class:`~repro.core.explorer.Explorer` for this
-        simulation's compiled PE on this problem size."""
+        simulation's compiled PE on this problem size. The compiled PE is
+        passed as the explorer's core, so TPU frontier points — including
+        multi-device ones — execute through the codegen'd uLBM kernel
+        (``Explorer.execute_frontier``, docs/pipeline.md §execute)."""
         from repro.core.explorer import Explorer
 
+        kw.setdefault("core", self.pe)
         return Explorer(self.stream_workload(),
                         census=self.hardware_report.census, **kw)
+
+    # ---- codegen'd-kernel surface (docs/pipeline.md §codegen) -------------
+
+    def stream_kernel(self):
+        """The PE lowered to a Pallas stream kernel (built once, cached)."""
+        if self._stream_kernel is None:
+            self._stream_kernel = self.pe.stream_kernel()
+        return self._stream_kernel
+
+    def stream_state(self, f, attr) -> jnp.ndarray:
+        """Pack (9, H, W) populations + attr into the kernel's (10, H, W)."""
+        return self.stream_kernel().pack([f[i] for i in range(9)] + [attr])
+
+    def stream_regs(self) -> tuple:
+        """``Append_Reg`` values of the PE for this problem."""
+        return (self.problem.one_tau, self.problem.u_lid, 1.0)
 
 
 # --------------------------------------------------------------------------

@@ -3,16 +3,47 @@
 The design-space-exploration walkthrough lives here (importable after
 ``pip install``); ``examples/dse_explore.py`` is a thin wrapper for
 running it straight from a checkout. The flow is the paper's workflow as
-a tool — compile SPD cores, sweep both target models in batched NumPy,
-extract Pareto frontiers, and execute TPU frontier points through real
-Pallas kernels: the hand-written ``lbm_stream`` for the LBM case study
-and the generic codegen'd kernel for the diffusion app
-(docs/pipeline.md §execute).
+a tool — compile SPD cores, sweep both target models in batched NumPy
+(including the device axis ``d``, docs/pipeline.md §distribute), extract
+Pareto frontiers, and execute TPU frontier points through real Pallas
+kernels via the one timing path, ``Explorer.execute_frontier``
+(docs/pipeline.md §execute): single-device points run the codegen'd
+kernel directly, ``d > 1`` points run sharded with halo exchange when the
+platform has the devices. ``--devices N`` caps the swept d axis,
+``--json PATH`` dumps the machine-readable results for scripting.
 """
 
 from __future__ import annotations
 
 import argparse
+import json
+
+
+def _point_dict(p) -> dict:
+    return {
+        "d": int(p.n),
+        "m": int(p.m),
+        "block_h": int(p.detail.get("block_rows", 0)) or None,
+        "feasible": bool(p.feasible),
+        "sustained_gflops": float(p.sustained_gflops),
+        "perf_per_watt": float(p.perf_per_watt),
+        "limits": list(p.limits),
+    }
+
+
+def _executed_dict(e) -> dict:
+    return {
+        "block_h": int(e.block_h),
+        "m": int(e.m),
+        "d": int(e.d),
+        "steps": int(e.steps),
+        "wall_s": float(e.wall_s),
+        "measured_mlups": float(e.measured_mlups),
+        "measured_gflops": float(e.measured_gflops),
+        "predicted_gflops": float(e.predicted_gflops),
+        "rel_error": float(e.rel_error),
+        "interpret": bool(e.interpret),
+    }
 
 
 def explore_main(argv: list[str] | None = None) -> None:
@@ -20,7 +51,8 @@ def explore_main(argv: list[str] | None = None) -> None:
     from repro.apps import diffusion as dif
     from repro.apps import lbm
     from repro.configs import get_arch
-    from repro.core.explorer import execute_frontier, render_executed
+    from repro.core.distribute import device_axis_values
+    from repro.core.explorer import render_executed
     from repro.core.planner import ArchStats, plan, render_plans
 
     ap = argparse.ArgumentParser(prog="repro-explore", description=__doc__)
@@ -29,9 +61,18 @@ def explore_main(argv: list[str] | None = None) -> None:
     ap.add_argument("--batch", type=int, default=256)
     ap.add_argument("--seq", type=int, default=4096)
     ap.add_argument("--topk", type=int, default=2)
+    ap.add_argument("--devices", type=int, default=4, metavar="N",
+                    help="sweep the device axis d over powers of two up to "
+                         "N (execution shards onto real devices; off-TPU "
+                         "force host devices with XLA_FLAGS=--xla_force_"
+                         "host_platform_device_count=N)")
+    ap.add_argument("--json", type=str, default=None, metavar="PATH",
+                    help="write the sweep/execution results as JSON")
     ap.add_argument("--no-execute", action="store_true",
                     help="skip the (host-speed) interpret-mode Pallas runs")
     args = ap.parse_args(argv)
+    d_values = device_axis_values(args.devices)
+    report: dict = {"d_values": list(d_values)}
 
     print("=" * 72)
     print("1) The paper's case study: LBM on the Stratix V model")
@@ -46,47 +87,74 @@ def explore_main(argv: list[str] | None = None) -> None:
     best = sweep.best("perf_per_watt")
     print(f"-> best configuration: (n, m) = ({best.n}, {best.m})  "
           f"[paper §III: (1, 4)]")
+    report["fpga"] = {
+        "best": {"n": int(best.n), "m": int(best.m),
+                 "perf_per_watt": float(best.perf_per_watt)},
+    }
 
     print()
     print("=" * 72)
-    print("2) Hardware adaptation: temporal blocking on TPU v5e")
+    print("2) Hardware adaptation: temporal blocking on TPU v5e,")
+    print(f"   device axis d ∈ {d_values} (sharding + halo exchange)")
     print("=" * 72)
-    tsweep = ex.sweep_tpu()
+    tsweep = ex.sweep_tpu(d_values=d_values)
     print(tsweep.table(k=8))
     print()
     print("TPU Pareto frontier:")
     print(tsweep.table(frontier_only=True, k=6))
+    tbest = tsweep.best("sustained_gflops")
+    report["tpu"] = {
+        "best": _point_dict(tbest),
+        "frontier": [_point_dict(p) for p in tsweep.frontier()],
+    }
 
     if not args.no_execute:
+        import jax
+
+        # Only propose device counts the platform can run: on the tall
+        # measurement grid the model drops d=1 off the frontier, so an
+        # uncapped sweep leaves a single-device machine nothing to time.
+        exec_d = device_axis_values(min(args.devices, jax.device_count()))
         print()
         print("=" * 72)
         print(f"3) Model -> measurement: top-{args.topk} frontier points "
-              f"through the Pallas kernel (interpret mode, 64x128)")
+              f"through the codegen'd")
+        print("   uLBM Pallas kernel (interpret mode, 256x128; d>1 points "
+              "run sharded —")
+        print("   the grid is tall enough that sharding beats the halo "
+              "exchange)")
         print("=" * 72)
-        mex = lbm.LBMSimulation(lbm.LBMProblem(64, 128, mode="wrap")).explorer()
+        msim = lbm.LBMSimulation(lbm.LBMProblem(256, 128, mode="wrap"))
+        mex = msim.explorer()
         msweep = mex.sweep_tpu(bh_values=(8, 16, 32, 64),
-                               m_values=(1, 2, 4, 8))
-        f0, attr, _ = lbm.taylor_green_init(64, 128)
-        runs = execute_frontier(msweep, f0, attr, one_tau=1 / 0.8,
-                                k=args.topk, interpret=True)
+                               m_values=(1, 2, 4, 8), d_values=exec_d)
+        f0, attr, _ = lbm.taylor_green_init(256, 128)
+        runs = mex.execute_frontier(
+            msweep, msim.stream_state(f0, attr), msim.stream_regs(),
+            k=args.topk, interpret=True,
+        )
         print(render_executed(runs))
+        report["lbm"] = {"executed": [_executed_dict(e) for e in runs]}
 
         print()
         print("=" * 72)
         print("3b) Any SPD core on the frontier: 2-D diffusion through the")
-        print("    generic SPD->Pallas codegen (docs/pipeline.md, 64x128)")
+        print("    generic SPD->Pallas codegen (docs/pipeline.md, 256x128)")
         print("=" * 72)
-        dsim = dif.DiffusionSimulation(64, 128, alpha=0.2)
+        dsim = dif.DiffusionSimulation(256, 128, alpha=0.2)
         dex = dsim.explorer()
         dsweep = dex.sweep_tpu(bh_values=(8, 16, 32, 64),
-                               m_values=(1, 2, 4, 8))
-        u0, _ = dif.sine_init(64, 128)
+                               m_values=(1, 2, 4, 8), d_values=exec_d)
+        u0, _ = dif.sine_init(256, 128)
         druns = dex.execute_frontier(dsweep, dsim.state(u0), (dsim.alpha,),
                                      k=args.topk, interpret=True)
         print(render_executed(druns))
         halo = dsim.kernel.summary
         print(f"(inferred stencil: {len(halo.offsets)} offsets, "
               f"halo = {halo.halo_y} row/step — no hand-written kernel)")
+        report["diffusion"] = {
+            "executed": [_executed_dict(e) for e in druns],
+        }
 
     print()
     print("=" * 72)
@@ -101,6 +169,11 @@ def explore_main(argv: list[str] | None = None) -> None:
         d_model=cfg.d_model, global_batch=args.batch, seq_len=args.seq,
     )
     print(render_plans(plan(stats, args.chips), top=10))
+
+    if args.json:
+        with open(args.json, "w", encoding="utf-8") as fh:
+            json.dump(report, fh, indent=2, sort_keys=True)
+        print(f"\n[wrote {args.json}]")
 
 
 if __name__ == "__main__":

@@ -5,9 +5,10 @@ exploration engine."""
 from .codegen import CodegenError, StencilSummary, StreamKernel, stencil_summary
 from .compiler import CompiledCore, HardwareReport, Registry, SPDCompileError
 from .dfg import Core, Node, SPDError, SPDGraphError, schedule
+from .distribute import ShardedStreamKernel, device_axis_values, ring_mesh
 from .dse import DesignPoint, FPGAModel, StreamWorkload, TPUModel
 from .explorer import Explorer, Sweep, execute_frontier, pareto_mask
-from .legalize import VMEM_BYTES, blocking_plan, resolve_run_plan
+from .legalize import VMEM_BYTES, blocking_plan, resolve_run_plan, shard_height
 from .library import LibraryModule, default_registry_modules
 from .spd import SPDParseError, parse_spd, parse_spd_file
 from .transforms import (
@@ -32,6 +33,7 @@ __all__ = [
     "SPDError",
     "SPDGraphError",
     "SPDParseError",
+    "ShardedStreamKernel",
     "StencilSummary",
     "StreamKernel",
     "StreamWorkload",
@@ -40,12 +42,15 @@ __all__ = [
     "VMEM_BYTES",
     "blocking_plan",
     "default_registry_modules",
+    "device_axis_values",
     "execute_frontier",
     "pareto_mask",
     "parse_spd",
     "parse_spd_file",
     "resolve_run_plan",
+    "ring_mesh",
     "schedule",
+    "shard_height",
     "spatial_duplicate",
     "spatial_duplicate_spd",
     "stencil_summary",

@@ -352,6 +352,7 @@ class StreamKernel:
             functools.partial(spd_multistep, self._step_fn, halo=self.halo),
             static_argnames=("m", "block_h", "interpret"),
         )
+        self._sharded: dict[int, object] = {}
         # jit'd so XLA applies the same mul-add contractions as inside the
         # kernel: this is what makes the bit-match contract hold exactly.
         self._reference = jax.jit(self._reference_impl, static_argnames=("m",))
@@ -397,6 +398,25 @@ class StreamKernel:
             self._multistep, state, self._scal(regs), steps=steps, m=m,
             block_h=block_h, interpret=interpret,
         )
+
+    def sharded(self, d: int, devices: Sequence | None = None):
+        """Decompose this kernel across ``d`` devices along y.
+
+        Returns a :class:`repro.core.distribute.ShardedStreamKernel`
+        running this kernel's stripe function per shard with ring halo
+        exchange between fused launches (docs/pipeline.md §distribute).
+        ``d == 1`` is the identity wrapper (delegates straight back).
+        Default-device wrappers are cached per ``d`` so repeat callers
+        (e.g. an app driver looping ``run(..., d=2)``) reuse the
+        shard_map jit cache instead of recompiling every call.
+        """
+        from .distribute import ShardedStreamKernel
+
+        if devices is not None:
+            return ShardedStreamKernel(self, d, devices)
+        if d not in self._sharded:
+            self._sharded[d] = ShardedStreamKernel(self, d)
+        return self._sharded[d]
 
     def run_for_point(self, state, regs: Sequence = (), *, point,
                       steps: int | None = None, interpret: bool = True):

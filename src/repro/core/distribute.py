@@ -1,0 +1,210 @@
+"""Multi-device spatial parallelism for stream kernels: the device axis.
+
+The paper's spatial parallelism duplicates pipelines until one chip's
+resources (or its memory link) give out. This module is the
+production-scale continuation (DESIGN.md §8, docs/pipeline.md
+§distribute): duplicate across *chips*. A codegen'd
+:class:`~repro.core.codegen.StreamKernel`'s ``(P, H, W)`` grid is
+decomposed along y into ``d`` equal shards on a one-axis ring
+:class:`~jax.sharding.Mesh`; every device runs the same temporal-blocking
+Pallas launch on its own shard under ``shard_map``, and before each fused
+m-step launch the ``m·halo`` boundary rows are exchanged with both ring
+neighbors via ``lax.ppermute`` (the mesh ring is what makes the global
+periodic boundary come out right: shard 0's up-neighbor is shard d-1).
+
+Halo-exchange protocol, per fused launch (DESIGN.md §8):
+
+1. each shard sends its bottom ``m·halo`` rows to the next shard on the
+   ring and its top ``m·halo`` rows to the previous one (two
+   ``ppermute`` collectives — on TPU these ride the ICI links the DSE
+   model's ``t_collective`` term prices);
+2. the received rows are padded out to one full ``block_h`` guard block
+   per side, giving the extended shard
+   ``[pad | up-halo | local | down-halo | pad]``;
+3. :func:`repro.kernels.spd_stream.sharded.spd_multistep_halo` advances
+   the shard m steps with the exact single-device stripe assembly, the
+   guard blocks standing in for the neighbor blocks.
+
+Because step 3 reuses the single-device kernel body and step 1 delivers
+exactly the rows the periodic index maps would have read, the sharded
+run is **bit-identical** to the single-device kernel for any legal
+``d`` — the correctness contract asserted in ``tests/test_distribute.py``
+for ``d ∈ {1, 2, 4}`` on both shipped apps.
+
+Plans come from the shared legalizer (docs/pipeline.md §legalize) with
+per-shard accounting: ``blocking_plan(..., d=d)`` requires ``d | H`` and
+tiles the *shard* height. Off-TPU, ``d`` host devices are available under
+``XLA_FLAGS=--xla_force_host_platform_device_count=N`` with the kernels
+in interpret mode — how CI runs the distribution suite.
+"""
+
+from __future__ import annotations
+
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.compat import shard_map
+from repro.parallel.sharding import stream_grid_pspec
+
+from .legalize import resolve_run_plan, shard_height
+
+#: Name of the device axis on the ring mesh.
+DEVICE_AXIS = "d"
+
+__all__ = [
+    "DEVICE_AXIS",
+    "ShardedStreamKernel",
+    "device_axis_values",
+    "ring_mesh",
+]
+
+
+def device_axis_values(max_d: int) -> tuple[int, ...]:
+    """Powers of two up to ``max_d`` — the default sweep of the d axis."""
+    if max_d < 1:
+        raise ValueError(f"max_d must be >= 1, got {max_d}")
+    vals = []
+    v = 1
+    while v <= max_d:
+        vals.append(v)
+        v *= 2
+    return tuple(vals)
+
+
+def ring_mesh(d: int, devices: Sequence | None = None) -> Mesh:
+    """A one-axis mesh of ``d`` devices named :data:`DEVICE_AXIS`.
+
+    The axis order is a ring for ``lax.ppermute``: neighbor exchange
+    between shard i and shards (i±1) mod d realizes the grid's periodic
+    y boundary across chips. Raises when the platform has fewer than
+    ``d`` devices (off-TPU, force host devices with
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=N``).
+    """
+    if d < 1:
+        raise ValueError(f"device axis must be >= 1, got d={d}")
+    devs = list(devices) if devices is not None else list(jax.devices())
+    if len(devs) < d:
+        raise ValueError(
+            f"need {d} devices for a d={d} ring, have {len(devs)} "
+            f"(off-TPU: XLA_FLAGS=--xla_force_host_platform_device_count={d})"
+        )
+    return Mesh(np.array(devs[:d]), (DEVICE_AXIS,))
+
+
+class ShardedStreamKernel:
+    """A codegen'd stream kernel decomposed across ``d`` devices along y.
+
+    Obtained via :meth:`repro.core.codegen.StreamKernel.sharded`. The
+    public surface mirrors the single-device kernel —
+    :meth:`run_blocked` / :meth:`run_for_point` — so the explorer times
+    single- and multi-device frontier points through one code path
+    (docs/pipeline.md §execute); ``d == 1`` simply delegates to the
+    wrapped kernel (no mesh, no exchange).
+    """
+
+    def __init__(self, kernel, d: int, devices: Sequence | None = None):
+        self.kernel = kernel
+        self.d = int(d)
+        self.halo = kernel.halo
+        self.mesh = ring_mesh(self.d, devices) if self.d > 1 else None
+        self._jitted: dict = {}
+
+    # ---- the shard-mapped launch loop --------------------------------------
+
+    def _fn(self, steps: int, m: int, block_h: int, interpret: bool):
+        """Build (and cache) the jitted shard_map'd run for one plan."""
+        key = (steps, m, block_h, interpret)
+        cached = self._jitted.get(key)
+        if cached is not None:
+            return cached
+        from repro.kernels.spd_stream.sharded import spd_multistep_halo
+        from repro.kernels.spd_stream.spd_stream import spd_multistep
+
+        d, halo = self.d, self.halo
+        step_fn = self.kernel._step_fn
+        mh = m * halo
+        perm_dn = [(i, (i + 1) % d) for i in range(d)]  # bottom rows -> next
+        perm_up = [(i, (i - 1) % d) for i in range(d)]  # top rows -> previous
+
+        def local_run(local, scal):
+            p, lh, w = local.shape
+
+            def body(_, cur):
+                if mh == 0:
+                    # Elementwise core: shards never read each other.
+                    return spd_multistep(
+                        step_fn, cur, scal, m=m, block_h=block_h, halo=0,
+                        interpret=interpret,
+                    )
+                # Ring halo exchange: receive the up-neighbor's bottom
+                # rows and the down-neighbor's top rows (periodic in y
+                # because the ring closes).
+                up = jax.lax.ppermute(
+                    cur[:, lh - mh:, :], DEVICE_AXIS, perm_dn
+                )
+                dn = jax.lax.ppermute(cur[:, :mh, :], DEVICE_AXIS, perm_up)
+                pad = jnp.zeros((p, block_h - mh, w), cur.dtype)
+                ext = jnp.concatenate([pad, up, cur, dn, pad], axis=1)
+                return spd_multistep_halo(
+                    step_fn, ext, scal, m=m, block_h=block_h, halo=halo,
+                    interpret=interpret,
+                )
+
+            return jax.lax.fori_loop(0, steps // m, body, local)
+
+        spec = stream_grid_pspec(DEVICE_AXIS)
+        fn = jax.jit(shard_map(
+            local_run, mesh=self.mesh, in_specs=(spec, P(None)),
+            out_specs=spec, check_vma=False,
+        ))
+        self._jitted[key] = fn
+        return fn
+
+    # ---- launches (mirroring StreamKernel) ---------------------------------
+
+    def run_blocked(self, state, regs: Sequence = (), *, steps: int,
+                    m: int, block_h: int, interpret: bool = True):
+        """Advance ``steps`` time steps, halo-exchanging every m steps."""
+        if self.d == 1:
+            return self.kernel.run_blocked(
+                state, regs, steps=steps, m=m, block_h=block_h,
+                interpret=interpret,
+            )
+        p, h, w = state.shape
+        local_h = shard_height(h, self.d)
+        if local_h % block_h:
+            raise ValueError(
+                f"shard height {local_h} (h={h} over d={self.d}) must be "
+                f"divisible by block_h={block_h}"
+            )
+        if m * self.halo > block_h:
+            raise ValueError(
+                f"m*halo={m * self.halo} must be <= block_h={block_h} "
+                "(halo source)"
+            )
+        if steps % m:
+            raise ValueError(f"steps={steps} must be a multiple of m={m}")
+        fn = self._fn(steps, m, block_h, interpret)
+        return fn(state, self.kernel._scal(regs))
+
+    def run_for_point(self, state, regs: Sequence = (), *, point,
+                      steps: int | None = None, interpret: bool = True):
+        """Advance the grid using a DSE design point's (block_h, m).
+
+        The point is legalized *per shard* with the shared
+        :func:`repro.core.legalize.resolve_run_plan` (``d`` = this
+        kernel's shard count). Returns ``(result, (block_h, m))``.
+        """
+        p, h, w = state.shape
+        block_h, m, nsteps = resolve_run_plan(
+            h, point, steps, halo=self.halo, width=w, words=p, d=self.d,
+        )
+        out = self.run_blocked(
+            state, regs, steps=nsteps, m=m, block_h=block_h,
+            interpret=interpret,
+        )
+        return out, (block_h, m)

@@ -392,11 +392,28 @@ class TPUModel:
         m: int,
         n_chips: int = 1,
         double_buffer: bool = True,
+        *,
+        d: int | None = None,
     ) -> DesignPoint:
+        """One (block_h, m, d) design point. ``d`` is the device axis —
+        the number of chips the grid is sharded across along y
+        (docs/pipeline.md §distribute); ``n_chips`` is the historical
+        spelling of the same coordinate and ``d`` wins when both are
+        given."""
         t = self.target
-        pt = DesignPoint(n=n_chips, m=m, feasible=True)
+        d = int(n_chips if d is None else d)
+        n_chips = d
+        pt = DesignPoint(n=d, m=m, feasible=True)
         grid_w = w.grid_w or int(math.sqrt(w.elems))
         bytes_per_elem = 4 * (w.words_in + w.words_out)
+
+        # The device axis decomposes the grid along y into d equal shards
+        # (halo-exchanged over ICI). A height d does not divide has no
+        # executable geometry — the sharded kernel rejects it — so the
+        # model marks it infeasible instead of pricing an impossible run.
+        if w.grid_w and d > 1 and (w.elems // w.grid_w) % d:
+            pt.feasible = False
+            pt.limits.append(f"shard {w.elems // w.grid_w}%{d}!=0")
 
         # VMEM residency: (bh + 2·m·halo) rows x width x state words, x2 if
         # the pipeline double-buffers the next block's DMA — the same stripe
@@ -446,6 +463,7 @@ class TPUModel:
             "arithmetic_intensity": m * w.flops_per_elem / bytes_per_elem,
             "block_rows": bh,
             "vmem_frac": vmem / t.vmem_bytes,
+            "d": d,
         }
         return pt
 
@@ -456,16 +474,21 @@ class TPUModel:
         m,
         n_chips=1,
         double_buffer: bool = True,
+        *,
+        d=None,
     ) -> dict[str, np.ndarray]:
-        """Vectorized :meth:`evaluate` over ``bh``/``m``/``n_chips`` arrays.
+        """Vectorized :meth:`evaluate` over ``bh``/``m``/``d`` arrays.
 
         Coordinates broadcast against each other; returns a dict of arrays
         in the broadcast shape, numerically identical to the scalar path.
+        ``d`` is the device axis (``n_chips`` kept as the historical
+        spelling); the returned dict carries it under both ``"n"`` and
+        ``"d"``.
         """
         t = self.target
         bh = np.asarray(bh, dtype=np.int64)
         m = np.asarray(m, dtype=np.int64)
-        chips = np.asarray(n_chips, dtype=np.int64)
+        chips = np.asarray(n_chips if d is None else d, dtype=np.int64)
         bh, m, chips = np.broadcast_arrays(bh, m, chips)
         grid_w = w.grid_w or int(math.sqrt(w.elems))
         bytes_per_elem = 4 * (w.words_in + w.words_out)
@@ -474,6 +497,11 @@ class TPUModel:
         vmem = (rows * grid_w * w.words_in * 4
                 * (VMEM_DOUBLE_BUFFER if double_buffer else 1))
         feasible = vmem <= t.vmem_bytes
+        if w.grid_w:
+            # y-sharding needs d equal shards (same check as the scalar
+            # path and the repro.core.distribute kernel's hard error).
+            grid_h = w.elems // w.grid_w
+            feasible = feasible & ((chips == 1) | (grid_h % chips == 0))
 
         useful = bh / (bh + 2 * m * w.halo)
         flops = w.elems * w.flops_per_elem * m / useful
@@ -498,6 +526,7 @@ class TPUModel:
         )
         return {
             "n": chips,
+            "d": chips,
             "m": m,
             "block_rows": bh,
             "feasible": feasible,

@@ -5,18 +5,22 @@ docs/pipeline.md §execute). Where :mod:`repro.core.dse` models one (n, m)
 point at a time, the explorer
 
 1. enumerates the full coordinate lattice for a compiled SPD core —
-   (n, m) for the FPGA target, (block_h, m, chips) for the TPU target —
-   and evaluates every point in one batched NumPy call
+   (n, m) for the FPGA target, (block_h, m, d) for the TPU target,
+   where d is the device axis (chips the grid shards across,
+   docs/pipeline.md §distribute) — and evaluates every point in one
+   batched NumPy call
    (:meth:`FPGAModel.evaluate_batch` / :meth:`TPUModel.evaluate_batch`);
 2. extracts the Pareto frontier over (throughput, perf/W, resource use)
    with a vectorized dominance check (:func:`pareto_mask`);
 3. for the TPU target, *executes* the top-k frontier points through a
    real Pallas kernel (interpret mode off-TPU) and reports
-   predicted-vs-measured error per point. Any codegen'd SPD core runs via
-   :meth:`Explorer.execute_frontier` (the generic
-   ``repro.core.codegen`` path); the hand-written ``lbm_stream``
-   kernel keeps the module-level :func:`execute_frontier` entry. Both
-   legalize plans through the shared :mod:`repro.core.legalize`.
+   predicted-vs-measured error per point. :meth:`Explorer.execute_frontier`
+   is the single timing/legalization path: any codegen'd SPD core runs
+   through it — single-device or sharded across ``d`` devices with halo
+   exchange (``repro.core.distribute``) — and the hand-written
+   ``lbm_stream`` kernel's deprecated module-level
+   :func:`execute_frontier` delegates to it via ``run_factory``. All
+   plans legalize through the shared :mod:`repro.core.legalize`.
 
 The paper's "find the best among them" result — (n, m) = (1, 4) on the
 Stratix V — falls out of ``Explorer.sweep_fpga(...).best()`` and is
@@ -262,17 +266,33 @@ class Explorer:
         self,
         bh_values: Sequence[int] = (8, 16, 32, 64, 128, 256),
         m_values: Sequence[int] = (1, 2, 4, 8, 16, 32),
-        chip_values: Sequence[int] = (1,),
+        d_values: Sequence[int] = (1, 2, 4),
+        chip_values: Sequence[int] | None = None,
     ) -> Sweep:
-        """Evaluate the (block_h, m, chips) lattice in one batched call."""
-        bh, m, chips = np.meshgrid(
+        """Evaluate the (block_h, m, d) lattice in one batched call.
+
+        ``d`` is the device axis — chips the grid is sharded across
+        along y (docs/pipeline.md §distribute); ``chip_values`` is the
+        deprecated spelling and wins when given.
+        """
+        if chip_values is not None:
+            import warnings
+
+            warnings.warn(
+                "sweep_tpu(chip_values=...) is deprecated; use d_values= "
+                "(the device axis, docs/pipeline.md §distribute)",
+                DeprecationWarning,
+                stacklevel=2,
+            )
+            d_values = chip_values
+        bh, m, d = np.meshgrid(
             np.asarray(bh_values, np.int64),
             np.asarray(m_values, np.int64),
-            np.asarray(chip_values, np.int64),
+            np.asarray(d_values, np.int64),
             indexing="ij",
         )
         data = self.tpu.evaluate_batch(
-            self.workload, bh.ravel(), m.ravel(), chips.ravel()
+            self.workload, bh.ravel(), m.ravel(), d=d.ravel()
         )
         return Sweep("tpu", self.workload, self.tpu, data)
 
@@ -283,60 +303,158 @@ class Explorer:
             return self.sweep_tpu(**kw)
         raise ValueError(f"unknown target {target!r} (want 'fpga' or 'tpu')")
 
-    # ---- model -> measurement (any codegen'd core) -------------------------
+    # ---- model -> measurement (the single timing/legalization path) --------
 
     def execute_frontier(
         self,
         sweep: "Sweep",
-        state,
+        state=None,
         regs: Sequence = (),
         core=None,
         k: int = 3,
         steps: int | None = None,
         interpret: bool = True,
         reps: int = 1,
+        *,
+        run_factory=None,
+        grid_shape: tuple[int, int] | None = None,
+        max_devices: int | None = None,
     ) -> list["ExecutedPoint"]:
-        """Run top-k TPU frontier points through a codegen'd stream kernel.
+        """Run the top-k *runnable* TPU frontier points and time them.
 
-        ``core`` (default: the compiled core this explorer was built
-        from) may be a :class:`~repro.core.compiler.CompiledCore` or an
-        already-lowered :class:`~repro.core.codegen.StreamKernel`;
+        The one model→measurement loop in the repo
+        (docs/pipeline.md §execute): every frontier point — single- or
+        multi-device — is legalized through the shared
+        :func:`repro.core.legalize.resolve_run_plan` (per shard when the
+        point's device axis ``d > 1``), executed, timed over ``reps``
+        measured calls after one compile/warm-up call, and compared
+        against the model's predicted sustained GFlop/s.
+
+        Default path: ``core`` (or the compiled core this explorer was
+        built from) lowers to a :class:`~repro.core.codegen.StreamKernel`;
         ``state`` is the stacked ``(P, H, W)`` grid and ``regs`` the
-        core's ``Append_Reg`` values. Each point's (block_h, m) is
-        legalized with the kernel's inferred halo and executed via
-        ``repro.kernels.spd_stream`` — the generic path any SPD core can
-        take, not just the hand-written LBM kernel
-        (docs/pipeline.md §execute).
+        core's ``Append_Reg`` values. Points with ``d > 1`` run through
+        :class:`repro.core.distribute.ShardedStreamKernel` on a ``d``-ring
+        mesh (docs/pipeline.md §distribute); points needing more devices
+        than the platform has (``max_devices``, default
+        ``jax.device_count()``) are skipped, so the walk continues down
+        the frontier until ``k`` points have actually executed.
+
+        Custom back ends (e.g. the hand-written LBM kernel behind the
+        deprecated module-level :func:`execute_frontier`) plug in via
+        ``run_factory(nsteps, m, block_h, d) -> nullary-callable | None``
+        plus the concrete ``grid_shape=(h, w)``; returning ``None`` skips
+        the point.
         """
-        from .codegen import StreamKernel
+        import jax
 
-        core = core if core is not None else self.core
-        if core is None:
+        from .legalize import resolve_run_plan
+
+        if sweep.target != "tpu":
             raise ValueError(
-                "Explorer.execute_frontier needs a compiled core: build "
-                "the explorer from a CompiledCore or pass core=..."
+                "execute_frontier needs a TPU sweep (the FPGA target is a "
+                "model only; there is no Stratix V attached)"
             )
-        kern = core if isinstance(core, StreamKernel) else core.stream_kernel()
-        p, h, w = state.shape
+        halo = sweep.workload.halo
+        width = words = 0
+        if run_factory is None:
+            from .codegen import StreamKernel
 
-        def make_run(nsteps: int, m: int, block_h: int):
-            def run():
-                return kern.run_blocked(
+            core = core if core is not None else self.core
+            if core is None:
+                raise ValueError(
+                    "Explorer.execute_frontier needs a compiled core: build "
+                    "the explorer from a CompiledCore or pass core=..."
+                )
+            kern = (
+                core if isinstance(core, StreamKernel)
+                else core.stream_kernel()
+            )
+            words, h, w = state.shape
+            halo, width = kern.halo, w
+
+            def run_factory(nsteps: int, m: int, block_h: int, d: int):
+                if d == 1:
+                    return lambda: kern.run_blocked(
+                        state, regs, steps=nsteps, m=m, block_h=block_h,
+                        interpret=interpret,
+                    )
+                runner = kern.sharded(d)  # cached per d on the kernel
+                return lambda: runner.run_blocked(
                     state, regs, steps=nsteps, m=m, block_h=block_h,
                     interpret=interpret,
                 )
+        else:
+            if grid_shape is None:
+                raise ValueError("run_factory needs grid_shape=(h, w)")
+            h, w = grid_shape
+        if max_devices is None:
+            max_devices = jax.device_count()
 
-            return run
+        flops_per_elem = sweep.workload.flops_per_elem
+        out: list[ExecutedPoint] = []
+        starved = 0
+        for pt in sweep.frontier():
+            if len(out) >= k:
+                break
+            d = max(1, int(pt.n))
+            if d > max_devices:
+                starved += 1  # not enough devices for this point's shards
+                continue
+            block_h, m, nsteps = resolve_run_plan(
+                h, pt, steps, halo=halo, width=width, words=words, d=d,
+            )
+            run = run_factory(nsteps, m, block_h, d)
+            if run is None:
+                continue  # this back end cannot execute the point
 
-        return _time_frontier(
-            sweep, make_run, h=h, w=w, k=k, steps=steps,
-            interpret=interpret, reps=reps, halo=kern.halo,
-            width=w, words=p,
-        )
+            jax.block_until_ready(run())  # compile + warm
+            t0 = time.perf_counter()
+            for _ in range(reps):
+                res = run()
+            jax.block_until_ready(res)
+            wall = (time.perf_counter() - t0) / reps
+
+            sites = h * w * nsteps
+            mlups = sites / wall / 1e6
+            measured = sites * flops_per_elem / wall / 1e9
+            predicted = pt.sustained_gflops
+            out.append(
+                ExecutedPoint(
+                    point=pt,
+                    block_h=block_h,
+                    m=m,
+                    d=d,
+                    steps=nsteps,
+                    wall_s=wall,
+                    measured_mlups=mlups,
+                    measured_gflops=measured,
+                    predicted_gflops=predicted,
+                    rel_error=(
+                        (predicted - measured) / predicted if predicted
+                        else 0.0
+                    ),
+                    interpret=interpret,
+                )
+            )
+        if starved and len(out) < k:
+            import warnings
+
+            warnings.warn(
+                f"execute_frontier skipped {starved} frontier point(s) "
+                f"needing more than {max_devices} device(s) and executed "
+                f"only {len(out)} of the requested {k}. Sweep with "
+                f"d_values capped at jax.device_count() (off-TPU: "
+                "XLA_FLAGS=--xla_force_host_platform_device_count=N) to "
+                "time multi-device points.",
+                RuntimeWarning,
+                stacklevel=2,
+            )
+        return out
 
 
 # --------------------------------------------------------------------------
-# Model -> measurement loop (TPU target only: the kernel we actually ship)
+# Executed frontier points (TPU target only: the kernel we actually ship)
 # --------------------------------------------------------------------------
 
 
@@ -345,8 +463,9 @@ class ExecutedPoint:
     """One frontier point run through the real Pallas kernel."""
 
     point: DesignPoint
-    block_h: int  # block actually used (clamped to divide the grid height)
+    block_h: int  # block actually used (clamped to divide the shard height)
     m: int
+    d: int  # device axis: shards the grid ran across (1 = single device)
     steps: int
     wall_s: float
     measured_mlups: float
@@ -354,73 +473,6 @@ class ExecutedPoint:
     predicted_gflops: float
     rel_error: float  # (predicted - measured) / predicted
     interpret: bool
-
-
-def _time_frontier(
-    sweep: Sweep,
-    make_run,
-    h: int,
-    w: int,
-    k: int,
-    steps: int | None,
-    interpret: bool,
-    reps: int,
-    halo: int = 1,
-    width: int = 0,
-    words: int = 0,
-) -> list[ExecutedPoint]:
-    """Shared measurement loop behind both frontier-execution entries.
-
-    ``make_run(nsteps, m, block_h)`` returns a nullary callable that
-    advances the grid; each top-k Pareto point is legalized through the
-    shared :func:`repro.core.legalize.resolve_run_plan` (with the
-    kernel's ``halo`` and, when given, the VMEM stripe clamp), timed
-    over ``reps`` measured calls after one compile/warm-up call, and
-    compared against the model's predicted sustained GFlop/s.
-    """
-    import jax
-
-    from .legalize import resolve_run_plan
-
-    if sweep.target != "tpu":
-        raise ValueError(
-            "execute_frontier needs a TPU sweep (the FPGA target is a model "
-            "only; there is no Stratix V attached)"
-        )
-    flops_per_elem = sweep.workload.flops_per_elem
-    out: list[ExecutedPoint] = []
-    for pt in sweep.frontier()[:k]:
-        block_h, m, nsteps = resolve_run_plan(
-            h, pt, steps, halo=halo, width=width, words=words,
-        )
-        run = make_run(nsteps, m, block_h)
-
-        jax.block_until_ready(run())  # compile + warm
-        t0 = time.perf_counter()
-        for _ in range(reps):
-            res = run()
-        jax.block_until_ready(res)
-        wall = (time.perf_counter() - t0) / reps
-
-        sites = h * w * nsteps
-        mlups = sites / wall / 1e6
-        measured = sites * flops_per_elem / wall / 1e9
-        predicted = pt.sustained_gflops
-        out.append(
-            ExecutedPoint(
-                point=pt,
-                block_h=block_h,
-                m=m,
-                steps=nsteps,
-                wall_s=wall,
-                measured_mlups=mlups,
-                measured_gflops=measured,
-                predicted_gflops=predicted,
-                rel_error=(predicted - measured) / predicted if predicted else 0.0,
-                interpret=interpret,
-            )
-        )
-    return out
 
 
 def execute_frontier(
@@ -434,47 +486,51 @@ def execute_frontier(
     interpret: bool = True,
     reps: int = 1,
 ) -> list[ExecutedPoint]:
-    """Run the top-k Pareto points of a TPU sweep through ``lbm_stream``.
+    """Deprecated: run TPU frontier points through ``lbm_stream``.
 
-    The hand-written-kernel entry (the generic codegen path is
-    :meth:`Explorer.execute_frontier`). Each point's (block_h, m) is
-    clamped onto the concrete grid with the shared
-    :func:`repro.core.legalize.blocking_plan`, timed over ``reps``
-    measured calls (after one compile/warm-up call), and compared against
-    the model's predicted sustained GFlop/s. Off-TPU, ``interpret=True``
-    runs the kernel through the Pallas interpreter — the numerics are the
-    kernel's, the wall clock is the host's, so expect large ``rel_error``
-    there; on real TPU hardware pass ``interpret=False``.
+    Thin wrapper kept for the hand-written-kernel entry; the single
+    timing/legalization path is :meth:`Explorer.execute_frontier`, which
+    this delegates to via ``run_factory``. The hand-written kernel is
+    single-device, so ``d > 1`` frontier points are skipped here — run
+    the generated uLBM kernel through the Explorer path to time those
+    (docs/pipeline.md §distribute).
     """
+    import warnings
+
+    warnings.warn(
+        "repro.core.explorer.execute_frontier is deprecated; use "
+        "Explorer.execute_frontier (the codegen'd-kernel path, which also "
+        "times multi-device points)",
+        DeprecationWarning,
+        stacklevel=2,
+    )
     from repro.kernels.lbm_stream.ops import lbm_run_blocked
 
-    h, w = f.shape[1], f.shape[2]
+    def run_factory(nsteps: int, m: int, block_h: int, d: int):
+        if d != 1:
+            return None  # the hand-written kernel has no sharded form
+        return lambda: lbm_run_blocked(
+            f, attr, one_tau, u_lid,
+            steps=nsteps, m=m, block_h=block_h, interpret=interpret,
+        )
 
-    def make_run(nsteps: int, m: int, block_h: int):
-        def run():
-            return lbm_run_blocked(
-                f, attr, one_tau, u_lid,
-                steps=nsteps, m=m, block_h=block_h, interpret=interpret,
-            )
-
-        return run
-
-    return _time_frontier(
-        sweep, make_run, h=h, w=w, k=k, steps=steps, interpret=interpret,
-        reps=reps,
+    return Explorer(sweep.workload).execute_frontier(
+        sweep, k=k, steps=steps, interpret=interpret, reps=reps,
+        run_factory=run_factory, grid_shape=(f.shape[1], f.shape[2]),
     )
 
 
 def render_executed(points: Sequence[ExecutedPoint]) -> str:
     """Markdown table of predicted-vs-measured frontier executions."""
     head = (
-        "| block_h | m | steps | predicted GF/s | measured GF/s | MLUPS "
+        "| block_h | m | d | steps | predicted GF/s | measured GF/s | MLUPS "
         "| rel err | mode |\n"
-        "|---------|---|-------|----------------|---------------|-------"
+        "|---------|---|---|-------|----------------|---------------|-------"
         "|---------|------|"
     )
     rows = [
-        f"| {e.block_h} | {e.m} | {e.steps} | {e.predicted_gflops:12.1f} | "
+        f"| {e.block_h} | {e.m} | {e.d} | {e.steps} | "
+        f"{e.predicted_gflops:12.1f} | "
         f"{e.measured_gflops:11.2f} | {e.measured_mlups:6.2f} | "
         f"{e.rel_error:+.3f} | {'interpret' if e.interpret else 'tpu'} |"
         for e in points

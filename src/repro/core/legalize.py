@@ -1,18 +1,28 @@
-"""Shared (block_h, m) legalization for temporal-blocking stream kernels.
+"""Shared (block_h, m, d) legalization for temporal-blocking stream kernels.
 
 A design point chosen by the analytic models (`repro.core.dse`) is
 grid-agnostic: the sweep lattice may propose a block height that does not
-divide the concrete grid, a fused-step count the halo cannot source, or a
-stripe that overflows VMEM. Both kernel back ends — the hand-written
-``repro.kernels.lbm_stream`` and the generic SPD codegen path
-``repro.kernels.spd_stream`` — legalize through the functions here, so
-model and measurement always agree on what "the closest legal plan" means
-(docs/pipeline.md §legalize).
+divide the concrete grid, a fused-step count the halo cannot source, a
+stripe that overflows VMEM, or a device count that does not split the
+grid into equal shards. All kernel back ends — the hand-written
+``repro.kernels.lbm_stream``, the generic SPD codegen path
+``repro.kernels.spd_stream``, and the multi-device
+``repro.core.distribute`` wrapper — legalize through the functions here,
+so model and measurement always agree on what "the closest legal plan"
+means (docs/pipeline.md §legalize).
 
 ``VMEM_BYTES`` is the single definition of the on-chip vector-memory
 budget: the DSE model's :class:`~repro.core.dse.TPUTarget` feasibility
 check and the legalizer's stripe clamp both read it, so a point the model
 calls feasible is one the legalizer will not shrink.
+
+The device axis ``d`` (spatial parallelism across chips,
+docs/pipeline.md §distribute) legalizes *per shard*: the grid's ``h``
+rows must split into ``d`` equal shards (a hard error otherwise — there
+is no "closest" shard count), and the (block_h, m) plan is then
+legalized against the shard height ``h / d``, with the same VMEM stripe
+accounting a single device uses (every shard keeps its own
+``block_h + 2·m·halo``-row stripes resident).
 """
 
 from __future__ import annotations
@@ -36,9 +46,28 @@ def stripe_vmem_bytes(block_h: int, m: int, width: int, words: int,
     return rows * max(width, 1) * max(words, 1) * 4 * mult
 
 
+def shard_height(h: int, d: int) -> int:
+    """Rows per shard when ``h`` grid rows split across ``d`` devices.
+
+    The sharded stream kernels decompose the grid along y into ``d``
+    equal contiguous shards (docs/pipeline.md §distribute); a height the
+    device axis does not divide is a hard error — unlike (block_h, m)
+    there is no "closest legal" shard count to fall back to.
+    """
+    d = int(d)
+    if d < 1:
+        raise ValueError(f"device axis must be >= 1, got d={d}")
+    if h % d:
+        raise ValueError(
+            f"grid height h={h} does not split into d={d} equal shards "
+            f"(sharded stream kernels need h % d == 0)"
+        )
+    return h // d
+
+
 def blocking_plan(h: int, block_h: int, m: int, *, halo: int = 1,
                   width: int = 0, words: int = 0,
-                  vmem_bytes: int = VMEM_BYTES) -> tuple[int, int]:
+                  vmem_bytes: int = VMEM_BYTES, d: int = 1) -> tuple[int, int]:
     """Legalize a model-chosen (block_h, m) for a grid of ``h`` rows.
 
     The temporal-blocking kernels require ``block_h | h`` and
@@ -50,6 +79,13 @@ def blocking_plan(h: int, block_h: int, m: int, *, halo: int = 1,
     requested block (or the smallest one >= m*halo when the request is
     too small), with ``m`` clamped into [1, h].
 
+    With ``d > 1`` the plan is legalized *per shard*: ``h`` must split
+    into ``d`` equal shards (:func:`shard_height` raises otherwise) and
+    the divisor search runs over the shard height ``h / d`` — each shard
+    of the distributed kernel (docs/pipeline.md §distribute) tiles its
+    own rows independently, with the same per-stripe VMEM residency as a
+    single device.
+
     When ``width``/``words`` are supplied the plan is additionally kept
     under the shared VMEM budget (:data:`VMEM_BYTES`): only legal
     divisors whose stripe fits are considered — the same residency
@@ -59,51 +95,54 @@ def blocking_plan(h: int, block_h: int, m: int, *, halo: int = 1,
     """
     if h < 1:
         raise ValueError(f"grid height must be positive, got {h}")
+    local_h = shard_height(h, d)
     halo = max(0, int(halo))
-    m = max(1, min(int(m), h))
+    m = max(1, min(int(m), local_h))
     floor = max(1, m * halo)
-    divisors = [d for d in range(1, h + 1) if h % d == 0]
-    legal = [d for d in divisors if d >= floor]
-    while not legal and m > 1:  # m*halo exceeds the grid: shrink m
+    divisors = [v for v in range(1, local_h + 1) if local_h % v == 0]
+    legal = [v for v in divisors if v >= floor]
+    while not legal and m > 1:  # m*halo exceeds the shard: shrink m
         m -= 1
         floor = max(1, m * halo)
-        legal = [d for d in divisors if d >= floor]
+        legal = [v for v in divisors if v >= floor]
     if not legal:  # even one fused step cannot source its halo
         raise ValueError(
-            f"stencil halo {halo} cannot be sourced on a grid of h={h} "
-            f"rows (needs a block of >= {halo} rows dividing h)"
+            f"stencil halo {halo} cannot be sourced on a shard of "
+            f"h={local_h} rows (needs a block of >= {halo} rows dividing "
+            f"it{f'; grid h={h} over d={d} shards' if d > 1 else ''})"
         )
     if width and words:
         fits = [
-            d for d in legal
-            if stripe_vmem_bytes(d, m, width, words, halo) <= vmem_bytes
+            v for v in legal
+            if stripe_vmem_bytes(v, m, width, words, halo) <= vmem_bytes
         ]
         if not fits:  # no legal block fits: fail loudly, not on-device
             smallest = min(legal)
             raise ValueError(
-                f"no legal block for h={h} fits VMEM: smallest stripe "
-                f"(block_h={smallest}, m={m}, halo={halo}) needs "
+                f"no legal block for shard h={local_h} fits VMEM: smallest "
+                f"stripe (block_h={smallest}, m={m}, halo={halo}) needs "
                 f"{stripe_vmem_bytes(smallest, m, width, words, halo)} B "
                 f"> budget {vmem_bytes} B"
             )
         legal = fits
-    under = [d for d in legal if d <= block_h]
+    under = [v for v in legal if v <= block_h]
     return (max(under) if under else min(legal)), m
 
 
 def resolve_run_plan(h: int, point, steps: int | None = None, *,
                      halo: int = 1, width: int = 0,
-                     words: int = 0) -> tuple[int, int, int]:
+                     words: int = 0, d: int = 1) -> tuple[int, int, int]:
     """Turn a DSE design point into a concrete (block_h, m, steps) plan.
 
     ``point`` is any object with ``m`` and ``detail['block_rows']`` (a
     :class:`repro.core.dse.DesignPoint` from a TPU sweep). The blocking is
-    legalized with :func:`blocking_plan`; ``steps`` defaults to one fused
-    launch (m steps) and is rounded down to a multiple of m.
+    legalized with :func:`blocking_plan` — per shard when ``d > 1``;
+    ``steps`` defaults to one fused launch (m steps) and is rounded down
+    to a multiple of m.
     """
     block_h, m = blocking_plan(
         h, int(point.detail["block_rows"]), int(point.m),
-        halo=halo, width=width, words=words,
+        halo=halo, width=width, words=words, d=d,
     )
     nsteps = m if steps is None else max(m, (steps // m) * m)
     return block_h, m, nsteps
@@ -114,5 +153,6 @@ __all__ = [
     "VMEM_DOUBLE_BUFFER",
     "blocking_plan",
     "resolve_run_plan",
+    "shard_height",
     "stripe_vmem_bytes",
 ]

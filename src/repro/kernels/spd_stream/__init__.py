@@ -4,8 +4,12 @@ Where :mod:`repro.kernels.lbm_stream` is the hand-written kernel for one
 application, this package is the *codegen target*: `repro.core.codegen`
 lowers any compiled SPD core into the stripe-update function that
 :func:`spd_multistep` launches on the TPU grid (docs/pipeline.md §codegen).
+:func:`spd_multistep_halo` is the per-shard variant of the same launch
+for multi-device runs, with the y-halo pre-exchanged by
+``repro.core.distribute`` (docs/pipeline.md §distribute).
 """
 
 from .ops import spd_multistep, stream_run_blocked
+from .sharded import spd_multistep_halo
 
-__all__ = ["spd_multistep", "stream_run_blocked"]
+__all__ = ["spd_multistep", "spd_multistep_halo", "stream_run_blocked"]

@@ -140,6 +140,17 @@ def batch_pspec(dp_axes) -> P:
     return P(dp_axes, None)
 
 
+def stream_grid_pspec(axis: str = "d") -> P:
+    """(P, H, W) stream-grid sharding: rows (y) split across ``axis``.
+
+    The channel dim stays whole (every shard needs all P fields of its
+    rows) and rows shard contiguously so each device owns one H/d-row
+    band — the decomposition ``repro.core.distribute`` halo-exchanges
+    (docs/pipeline.md §distribute).
+    """
+    return P(None, axis, None)
+
+
 def cache_pspec(path, leaf, *, dp_axes, n_kv_heads: int,
                 model_axis_size: int, axis_sizes: dict | None = None) -> P:
     """KV/SSM cache shardings: batch over dp, heads over 'model' when they

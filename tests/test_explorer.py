@@ -121,7 +121,7 @@ def test_tpu_batched_matches_scalar_point_for_point(explorer):
     sweep = explorer.sweep_tpu(
         bh_values=(8, 32, 256, 4096),
         m_values=(1, 4, 64),
-        chip_values=(1, 4),
+        d_values=(1, 4),
     )
     model = TPUModel()
     assert len(sweep) == 24
@@ -215,10 +215,32 @@ def test_frontier_sorted_and_feasible(explorer):
 
 def test_tpu_frontier_prefers_temporal_blocking(explorer):
     """m=1 (no temporal reuse) is memory-bound and never frontier-best."""
-    sweep = explorer.sweep_tpu()
+    sweep = explorer.sweep_tpu(d_values=(1,))
     best = sweep.best("sustained_gflops")
     assert best.m > 1
     assert "compute-bound" in best.limits
+
+
+def test_tpu_sweep_chip_values_alias_warns(explorer):
+    """The deprecated chip_values spelling still works, with a warning."""
+    with pytest.warns(DeprecationWarning, match="d_values"):
+        sweep = explorer.sweep_tpu(
+            bh_values=(8,), m_values=(1,), chip_values=(1, 2)
+        )
+    assert set(np.unique(sweep.data["d"])) == {1, 2}
+
+
+def test_tpu_default_sweep_enumerates_device_axis(explorer):
+    """The default TPU lattice carries the device axis d ∈ {1, 2, 4} and
+    scaling out stays on the frontier (more chips, more throughput)."""
+    sweep = explorer.sweep_tpu()
+    assert set(np.unique(sweep.data["d"])) == {1, 2, 4}
+    np.testing.assert_array_equal(sweep.data["d"], sweep.data["n"])
+    frontier = sweep.frontier()
+    assert any(p.n > 1 for p in frontier)
+    best = sweep.best("sustained_gflops")
+    assert best.n == 4  # throughput scales with the device axis
+    assert best.m > 1  # ...but temporal blocking still pays
 
 
 def test_top_returns_k_best_feasible(explorer):
@@ -275,8 +297,9 @@ def test_execute_frontier_closes_the_loop():
     sim = lbm.LBMSimulation(lbm.LBMProblem(16, 32, mode="wrap"))
     sweep = sim.explorer().sweep_tpu(bh_values=(8, 16), m_values=(1, 2))
     f, attr, _ = lbm.taylor_green_init(16, 32)
-    runs = execute_frontier(sweep, f, attr, one_tau=1 / 0.8, k=2,
-                            interpret=True)
+    with pytest.warns(DeprecationWarning):  # thin wrapper, one timing path
+        runs = execute_frontier(sweep, f, attr, one_tau=1 / 0.8, k=2,
+                                interpret=True)
     assert 1 <= len(runs) <= 2
     for r in runs:
         assert 16 % r.block_h == 0 and r.m <= r.block_h
@@ -292,7 +315,8 @@ def test_execute_frontier_rejects_fpga_sweep(explorer):
 
     sweep = explorer.sweep_fpga()
     dummy = jnp.zeros((9, 8, 16), jnp.float32)
-    with pytest.raises(ValueError, match="TPU sweep"):
+    with pytest.warns(DeprecationWarning), \
+            pytest.raises(ValueError, match="TPU sweep"):
         execute_frontier(sweep, dummy, dummy[0], 1.0)
 
 
