@@ -10,16 +10,22 @@ driven end-to-end by ``repro.core.explorer``:
    loop: the top-k frontier points *executed* through the codegen'd uLBM
    Pallas kernel via the single timing path
    (``Explorer.execute_frontier``); d > 1 points run sharded when the
-   platform has the devices and are skipped otherwise. Off-TPU this runs
-   the Pallas interpreter, so the error column mostly reflects
-   host-vs-TPU speed; on real hardware pass interpret=False for a
-   meaningful diff.
+   platform has the devices and are skipped otherwise. Measurements use
+   the honest policy of ``repro.core.measure`` (docs/pipeline.md
+   §measure): median-of-reps timing with per-rep synchronization,
+   *backend-calibrated* predictions — off-TPU the calibration anchors
+   the model to the Pallas interpreter's measured throughput, so
+   ``rel_error`` is a model-fidelity signal instead of the old
+   meaningless host-vs-TPU speed ratio (≈ 0.9999 on every point) — and
+   the persistent measurement cache, whose hit/miss stats land in the
+   JSON (a repeated benchmark run re-times nothing).
 3. LM mesh planner: (dp, tp, pp) ranking for a transformer arch — the
    paper's spatial/temporal trade lifted to the fleet (DESIGN.md §4).
 
 Invoked as a script this also writes ``BENCH_dse.json`` next to the repo
-root — best point, sustained GFLOPS, and predicted-vs-measured error per
-app — so the performance trajectory is recorded across PRs.
+root — best point, sustained GFLOPS, calibrated predicted-vs-measured
+error and cache stats per app — so the performance trajectory is
+recorded across PRs.
 """
 
 from __future__ import annotations
@@ -30,6 +36,7 @@ import time
 
 from repro.apps import lbm
 from repro.core.explorer import render_executed
+from repro.core.measure import MeasurementCache, calibrate_backend
 from repro.core.planner import ArchStats, plan, render_plans
 from repro.configs import get_arch
 
@@ -45,21 +52,9 @@ BENCH_PATH = os.path.join(
 )
 
 
-def _executed_record(e) -> dict:
-    return {
-        "block_h": int(e.block_h),
-        "m": int(e.m),
-        "d": int(e.d),
-        "predicted_gflops": float(e.predicted_gflops),
-        "measured_gflops": float(e.measured_gflops),
-        "measured_mlups": float(e.measured_mlups),
-        "rel_error": float(e.rel_error),
-        "interpret": bool(e.interpret),
-    }
-
-
-def run(topk: int = 3, interpret: bool = True,
-        bench: dict | None = None) -> list[str]:
+def run(topk: int = 3, interpret: bool = True, reps: int = 3,
+        bench: dict | None = None,
+        cache: MeasurementCache | None = None) -> list[str]:
     """Print the sweep sections; fill ``bench`` (if given) for the JSON."""
     out = []
     t0 = time.time()
@@ -113,15 +108,17 @@ def run(topk: int = 3, interpret: bool = True,
     msweep = mex.sweep_tpu(bh_values=(8, 16, 32, 64), m_values=(1, 2, 4, 8),
                            d_values=exec_d)
     f0, attr, _ = lbm.taylor_green_init(MEASURE_H, MEASURE_W)
+    mstate, mregs = msim.stream_state(f0, attr), msim.stream_regs()
     runs = mex.execute_frontier(
-        msweep, msim.stream_state(f0, attr), msim.stream_regs(),
-        k=topk, interpret=interpret,
+        msweep, mstate, mregs, k=topk, interpret=interpret, reps=reps,
+        calibrate=True, cache=cache,
     )
     out.append(render_executed(runs))
     if interpret:
         out.append(
-            "(interpret mode: measured == host interpreter speed; the "
-            "predicted column is the TPU model — run on TPU with "
+            "(interpret mode: the calib column anchors the model to the "
+            "measured Pallas-interpreter throughput, so rel err is "
+            "model fidelity, not host-vs-TPU speed; run on TPU with "
             "interpret=False to close the loop on hardware)"
         )
 
@@ -137,7 +134,8 @@ def run(topk: int = 3, interpret: bool = True,
                            d_values=exec_d)
     u0, _ = dif.sine_init(MEASURE_H, MEASURE_W)
     druns = dex.execute_frontier(
-        dsweep, dsim.state(u0), (dsim.alpha,), k=topk, interpret=interpret
+        dsweep, dsim.state(u0), (dsim.alpha,), k=topk, interpret=interpret,
+        reps=reps, calibrate=True, cache=cache,
     )
     out.append(render_executed(druns))
     out.append(
@@ -145,6 +143,33 @@ def run(topk: int = 3, interpret: bool = True,
         f"stencil offsets inferred from the DFG, halo = "
         f"{dsim.kernel.summary.halo_y} row/step — docs/pipeline.md)"
     )
+
+    # Measurement-cache verification pass: the same frontier again — every
+    # point (and the calibration anchor) must come back from the cache
+    # without recompiling or retiming (docs/pipeline.md §measure).
+    pass2_hits = 0
+    if cache is not None:
+        hits_before = cache.hits
+        reruns = mex.execute_frontier(
+            msweep, mstate, mregs, k=topk, interpret=interpret, reps=reps,
+            calibrate=True, cache=cache,
+        )
+        pass2_hits = cache.hits - hits_before
+        # Hard check, not just a printout (and not a stripped-under--O
+        # assert): an identical sweep in the same process must re-time
+        # nothing (fingerprint/key stability).
+        retimed = [(e.block_h, e.m, e.d) for e in reruns if not e.cached]
+        if retimed:
+            raise RuntimeError(
+                f"measurement-cache regression: repeated frontier pass "
+                f"re-timed {retimed}"
+            )
+        out.append(
+            f"\n## DSE sweep 2d: repeated uLBM frontier pass — "
+            f"{pass2_hits} measurement-cache hit(s), "
+            f"{sum(1 for e in reruns if e.cached)}/{len(reruns)} points "
+            "served from cache"
+        )
 
     out.append("\n## DSE sweep 3: LM mesh planner (granite-34b, 256 chips)")
     g = get_arch("granite-34b")
@@ -170,27 +195,52 @@ def run(topk: int = 3, interpret: bool = True,
                      "perf_per_watt": float(best.perf_per_watt)},
             "paper_best": {"n": 1, "m": 4, "perf_per_watt": 2.416},
         }
-        for name, sw, rr in (("lbm", msweep, runs),
-                             ("diffusion", dsweep, druns)):
+        for name, app_ex, rr in (("lbm", mex, runs),
+                                 ("diffusion", dex, druns)):
+            # The recorded best comes from the *model* lattice over the
+            # full device axis — machine-independent, so the committed
+            # PR-over-PR trajectory doesn't move with how many devices
+            # the regenerating machine happened to have. Executed points
+            # are measurements and are necessarily platform-bound.
+            sw = app_ex.sweep_tpu(bh_values=(8, 16, 32, 64),
+                                  m_values=(1, 2, 4, 8))
             b = sw.best("sustained_gflops")
             bench[name] = {
                 "best": {"d": int(b.n), "m": int(b.m),
                          "block_h": int(b.detail["block_rows"]),
                          "sustained_gflops": float(b.sustained_gflops)},
-                "executed": [_executed_record(e) for e in rr],
+                "executed": [e.as_dict() for e in rr],
             }
         bench["grid"] = [MEASURE_H, MEASURE_W]
+        bench["exec_d"] = [int(d) for d in exec_d]
         bench["interpret"] = bool(interpret)
+        cal = calibrate_backend(interpret=interpret, reps=reps)
+        bench["measure"] = {
+            "backend": cal.backend,
+            "reps": int(reps),
+            "platform_elem_gflops": float(cal.elem_gflops),
+            "platform_mem_gbs": float(cal.mem_gbs),
+            "cache": None if cache is None else cache.stats(),
+            "cache_hits_on_repeat": int(pass2_hits),
+        }
     return out
 
 
 def write_bench(path: str = BENCH_PATH, topk: int = 3,
-                interpret: bool = True) -> list[str]:
+                interpret: bool = True, reps: int = 3) -> list[str]:
     """Run the sweeps and record ``BENCH_dse.json`` (the PR-over-PR
-    trajectory file: best point, sustained GFLOPS, and
-    predicted-vs-measured error per app)."""
+    trajectory file: best point, sustained GFLOPS, calibrated
+    predicted-vs-measured error, and measurement-cache stats per app).
+
+    Uses the default persistent measurement cache, so re-invoking the
+    benchmark skips recompile+retime for every already-seen frontier
+    point and calibration anchor. The generic platform probes
+    (``platform_elem_gflops`` / ``platform_mem_gbs``) are deliberately
+    re-measured each run — they record the platform this run actually
+    had, not a cached one."""
     bench: dict = {}
-    out = run(topk=topk, interpret=interpret, bench=bench)
+    out = run(topk=topk, interpret=interpret, reps=reps, bench=bench,
+              cache=MeasurementCache())
     with open(path, "w", encoding="utf-8") as fh:
         json.dump(bench, fh, indent=2, sort_keys=True)
         fh.write("\n")

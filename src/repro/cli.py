@@ -11,6 +11,13 @@ kernels via the one timing path, ``Explorer.execute_frontier``
 kernel directly, ``d > 1`` points run sharded with halo exchange when the
 platform has the devices. ``--devices N`` caps the swept d axis,
 ``--json PATH`` dumps the machine-readable results for scripting.
+
+Measurement policy (docs/pipeline.md §measure): runs are timed with the
+honest harness (``--reps`` median-of-reps, every rep synchronized), the
+platform is calibrated so ``rel err`` diffs against the backend actually
+running (``--no-calibrate`` to compare against raw TPU-v5e roofline
+constants instead), and wall times persist in the on-disk measurement
+cache (``--no-cache`` to always re-time).
 """
 
 from __future__ import annotations
@@ -28,21 +35,6 @@ def _point_dict(p) -> dict:
         "sustained_gflops": float(p.sustained_gflops),
         "perf_per_watt": float(p.perf_per_watt),
         "limits": list(p.limits),
-    }
-
-
-def _executed_dict(e) -> dict:
-    return {
-        "block_h": int(e.block_h),
-        "m": int(e.m),
-        "d": int(e.d),
-        "steps": int(e.steps),
-        "wall_s": float(e.wall_s),
-        "measured_mlups": float(e.measured_mlups),
-        "measured_gflops": float(e.measured_gflops),
-        "predicted_gflops": float(e.predicted_gflops),
-        "rel_error": float(e.rel_error),
-        "interpret": bool(e.interpret),
     }
 
 
@@ -70,6 +62,18 @@ def explore_main(argv: list[str] | None = None) -> None:
                     help="write the sweep/execution results as JSON")
     ap.add_argument("--no-execute", action="store_true",
                     help="skip the (host-speed) interpret-mode Pallas runs")
+    ap.add_argument("--reps", type=int, default=3, metavar="N",
+                    help="measured timing reps per executed point (median "
+                         "is reported; every rep is synchronized)")
+    ap.add_argument("--calibrate", action=argparse.BooleanOptionalAction,
+                    default=True,
+                    help="calibrate predictions against the live backend's "
+                         "measured throughput/bandwidth so rel err is a "
+                         "model-fidelity signal (--no-calibrate diffs "
+                         "against raw TPU-v5e roofline constants)")
+    ap.add_argument("--no-cache", action="store_true",
+                    help="skip the persistent measurement cache and "
+                         "re-time every point")
     args = ap.parse_args(argv)
     d_values = device_axis_values(args.devices)
     report: dict = {"d_values": list(d_values)}
@@ -111,6 +115,9 @@ def explore_main(argv: list[str] | None = None) -> None:
     if not args.no_execute:
         import jax
 
+        from repro.core.measure import MeasurementCache
+
+        mcache = None if args.no_cache else MeasurementCache()
         # Only propose device counts the platform can run: on the tall
         # measurement grid the model drops d=1 off the frontier, so an
         # uncapped sweep leaves a single-device machine nothing to time.
@@ -131,10 +138,11 @@ def explore_main(argv: list[str] | None = None) -> None:
         f0, attr, _ = lbm.taylor_green_init(256, 128)
         runs = mex.execute_frontier(
             msweep, msim.stream_state(f0, attr), msim.stream_regs(),
-            k=args.topk, interpret=True,
+            k=args.topk, interpret=True, reps=args.reps,
+            calibrate=args.calibrate, cache=mcache,
         )
         print(render_executed(runs))
-        report["lbm"] = {"executed": [_executed_dict(e) for e in runs]}
+        report["lbm"] = {"executed": [e.as_dict() for e in runs]}
 
         print()
         print("=" * 72)
@@ -147,14 +155,25 @@ def explore_main(argv: list[str] | None = None) -> None:
                                m_values=(1, 2, 4, 8), d_values=exec_d)
         u0, _ = dif.sine_init(256, 128)
         druns = dex.execute_frontier(dsweep, dsim.state(u0), (dsim.alpha,),
-                                     k=args.topk, interpret=True)
+                                     k=args.topk, interpret=True,
+                                     reps=args.reps,
+                                     calibrate=args.calibrate, cache=mcache)
         print(render_executed(druns))
         halo = dsim.kernel.summary
         print(f"(inferred stencil: {len(halo.offsets)} offsets, "
               f"halo = {halo.halo_y} row/step — no hand-written kernel)")
         report["diffusion"] = {
-            "executed": [_executed_dict(e) for e in druns],
+            "executed": [e.as_dict() for e in druns],
         }
+        report["measure"] = {
+            "reps": args.reps,
+            "calibrate": bool(args.calibrate),
+            "cache": None if mcache is None else mcache.stats(),
+        }
+        if mcache is not None:
+            s = mcache.stats()
+            print(f"(measurement cache: {s['hits']} hit(s), "
+                  f"{s['misses']} miss(es) — {s['path']})")
 
     print()
     print("=" * 72)

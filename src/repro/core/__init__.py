@@ -10,6 +10,14 @@ from .dse import DesignPoint, FPGAModel, StreamWorkload, TPUModel
 from .explorer import Explorer, Sweep, execute_frontier, pareto_mask
 from .legalize import VMEM_BYTES, blocking_plan, resolve_run_plan, shard_height
 from .library import LibraryModule, default_registry_modules
+from .measure import (
+    BackendCalibration,
+    MeasurementCache,
+    calibrate_backend,
+    calibrate_execution,
+    core_fingerprint,
+    time_run,
+)
 from .spd import SPDParseError, parse_spd, parse_spd_file
 from .transforms import (
     spatial_duplicate,
@@ -19,6 +27,7 @@ from .transforms import (
 )
 
 __all__ = [
+    "BackendCalibration",
     "CodegenError",
     "CompiledCore",
     "Core",
@@ -27,6 +36,7 @@ __all__ = [
     "FPGAModel",
     "HardwareReport",
     "LibraryModule",
+    "MeasurementCache",
     "Node",
     "Registry",
     "SPDCompileError",
@@ -41,6 +51,9 @@ __all__ = [
     "TPUModel",
     "VMEM_BYTES",
     "blocking_plan",
+    "calibrate_backend",
+    "calibrate_execution",
+    "core_fingerprint",
     "default_registry_modules",
     "device_axis_values",
     "execute_frontier",
@@ -56,4 +69,5 @@ __all__ = [
     "stencil_summary",
     "temporal_cascade",
     "temporal_cascade_spd",
+    "time_run",
 ]

@@ -385,6 +385,22 @@ class TPUModel:
     def __init__(self, target: TPUTarget = TPUTarget()):
         self.target = target
 
+    @classmethod
+    def calibrated(
+        cls, calibration, d: int = 1, base: TPUTarget | None = None
+    ) -> "TPUModel":
+        """A model whose target carries *measured* platform constants.
+
+        ``calibration`` is a :class:`repro.core.measure.BackendCalibration`
+        (anything with a ``target(d, base)`` method): the returned model
+        predicts against the effective throughput/bandwidth of the
+        platform actually running — the Pallas interpreter on CPU, the
+        chip on TPU — so predicted-vs-measured is a model-fidelity
+        signal, not a host-vs-TPU speed ratio
+        (docs/pipeline.md §measure, DESIGN.md §9).
+        """
+        return cls(calibration.target(d=d, base=base))
+
     def evaluate(
         self,
         w: StreamWorkload,
@@ -441,12 +457,14 @@ class TPUModel:
         useful_flops = w.elems * w.flops_per_elem * m
         sustained = useful_flops / step_time / 1e9 if step_time > 0 else 0.0
         peak = n_chips * t.vpu_f32_tflops * 1e3  # GFlop/s
+        # One spelling for the binding resource, shared verbatim with
+        # evaluate_batch's data["bound"] (asserted in tests/test_explorer).
         bound = (
-            "compute"
+            "compute-bound"
             if t_compute >= max(t_memory, t_coll)
-            else ("memory" if t_memory >= t_coll else "collective")
+            else ("memory-bound" if t_memory >= t_coll else "collective-bound")
         )
-        pt.limits.append(f"{bound}-bound")
+        pt.limits.append(bound)
         pt.peak_gflops = peak
         pt.sustained_gflops = sustained
         pt.utilization = sustained / peak if peak else 0.0
@@ -521,8 +539,8 @@ class TPUModel:
         ppw = np.where(power > 0, sustained / power, 0.0)
         bound = np.where(
             t_compute >= np.maximum(t_memory, t_coll),
-            "compute",
-            np.where(t_memory >= t_coll, "memory", "collective"),
+            "compute-bound",
+            np.where(t_memory >= t_coll, "memory-bound", "collective-bound"),
         )
         return {
             "n": chips,

@@ -20,7 +20,11 @@ point at a time, the explorer
    exchange (``repro.core.distribute``) — and the hand-written
    ``lbm_stream`` kernel's deprecated module-level
    :func:`execute_frontier` delegates to it via ``run_factory``. All
-   plans legalize through the shared :mod:`repro.core.legalize`.
+   plans legalize through the shared :mod:`repro.core.legalize`;
+   timing, backend calibration (the prediction is held against the
+   platform actually running, so ``rel_error`` is a model-fidelity
+   signal) and the persistent measurement cache come from
+   :mod:`repro.core.measure` (docs/pipeline.md §measure).
 
 The paper's "find the best among them" result — (n, m) = (1, 4) on the
 Stratix V — falls out of ``Explorer.sweep_fpga(...).best()`` and is
@@ -29,7 +33,6 @@ asserted in ``tests/test_explorer.py``.
 
 from __future__ import annotations
 
-import time
 from dataclasses import dataclass, field
 from typing import Sequence
 
@@ -64,6 +67,10 @@ def pareto_mask(objectives, maximize: Sequence[bool] | None = None) -> np.ndarra
     least one (after flipping minimized columns). Fully vectorized: one
     (P, P, K) broadcast, no per-point Python loop — fine for the few
     thousand points a lattice sweep produces.
+
+    Rows with any non-finite objective are excluded up front and never
+    returned: NaN compares False against everything, which would have
+    made such rows "never dominated" and polluted the frontier.
     """
     X = np.asarray(objectives, dtype=float)
     if X.ndim == 1:
@@ -71,10 +78,16 @@ def pareto_mask(objectives, maximize: Sequence[bool] | None = None) -> np.ndarra
     if maximize is not None:
         sign = np.where(np.asarray(maximize, dtype=bool), 1.0, -1.0)
         X = X * sign
-    ge = (X[None, :, :] >= X[:, None, :]).all(axis=-1)  # ge[i, j]: j >= i
-    gt = (X[None, :, :] > X[:, None, :]).any(axis=-1)  # gt[i, j]: j > i somewhere
+    mask = np.zeros(X.shape[0], dtype=bool)
+    idx = np.flatnonzero(np.isfinite(X).all(axis=1))
+    if idx.size == 0:
+        return mask
+    F = X[idx]
+    ge = (F[None, :, :] >= F[:, None, :]).all(axis=-1)  # ge[i, j]: j >= i
+    gt = (F[None, :, :] > F[:, None, :]).any(axis=-1)  # gt[i, j]: j > i somewhere
     dominated = (ge & gt).any(axis=1)
-    return ~dominated
+    mask[idx] = ~dominated
+    return mask
 
 
 # --------------------------------------------------------------------------
@@ -181,7 +194,8 @@ class Sweep:
             self.workload,
             int(self.data["block_rows"][i]),
             int(self.data["m"][i]),
-            n_chips=int(self.data["n"][i]),
+            d=int(self.data["n"][i]),
+            **self.scalar_kwargs,
         )
 
     def table(self, k: int | None = None, frontier_only: bool = False) -> str:
@@ -268,12 +282,15 @@ class Explorer:
         m_values: Sequence[int] = (1, 2, 4, 8, 16, 32),
         d_values: Sequence[int] = (1, 2, 4),
         chip_values: Sequence[int] | None = None,
+        double_buffer: bool = True,
     ) -> Sweep:
         """Evaluate the (block_h, m, d) lattice in one batched call.
 
         ``d`` is the device axis — chips the grid is sharded across
         along y (docs/pipeline.md §distribute); ``chip_values`` is the
-        deprecated spelling and wins when given.
+        deprecated spelling and wins when given. ``double_buffer``
+        threads through to both the batched evaluation and the scalar
+        ``Sweep.point`` re-materialization.
         """
         if chip_values is not None:
             import warnings
@@ -292,9 +309,13 @@ class Explorer:
             indexing="ij",
         )
         data = self.tpu.evaluate_batch(
-            self.workload, bh.ravel(), m.ravel(), d=d.ravel()
+            self.workload, bh.ravel(), m.ravel(), d=d.ravel(),
+            double_buffer=double_buffer,
         )
-        return Sweep("tpu", self.workload, self.tpu, data)
+        return Sweep(
+            "tpu", self.workload, self.tpu, data,
+            scalar_kwargs={"double_buffer": double_buffer},
+        )
 
     def sweep(self, target: str, **kw) -> Sweep:
         if target == "fpga":
@@ -314,8 +335,12 @@ class Explorer:
         k: int = 3,
         steps: int | None = None,
         interpret: bool = True,
-        reps: int = 1,
+        reps: int = 3,
         *,
+        warmup: int = 1,
+        calibrate: bool = True,
+        cache=None,
+        cache_tag: str | None = None,
         run_factory=None,
         grid_shape: tuple[int, int] | None = None,
         max_devices: int | None = None,
@@ -323,12 +348,34 @@ class Explorer:
         """Run the top-k *runnable* TPU frontier points and time them.
 
         The one model→measurement loop in the repo
-        (docs/pipeline.md §execute): every frontier point — single- or
-        multi-device — is legalized through the shared
+        (docs/pipeline.md §execute, §measure): every frontier point —
+        single- or multi-device — is legalized through the shared
         :func:`repro.core.legalize.resolve_run_plan` (per shard when the
-        point's device axis ``d > 1``), executed, timed over ``reps``
-        measured calls after one compile/warm-up call, and compared
-        against the model's predicted sustained GFlop/s.
+        point's device axis ``d > 1``, and always with the concrete
+        stripe geometry, so the VMEM clamp applies identically on the
+        codegen and ``run_factory`` paths), executed, and timed with the
+        honest harness :func:`repro.core.measure.time_run` — ``warmup``
+        un-timed compile calls, ``reps`` measured calls each
+        individually ``block_until_ready``'d, median wall time.
+
+        With ``calibrate=True`` (the default) the platform is probed
+        through the same execution path
+        (:func:`repro.core.measure.calibrate_execution`, one anchor per
+        device-axis value encountered) and each point's ``rel_error`` is
+        reported against the *calibrated* prediction — the throughput of
+        the backend actually running (Pallas interpreter on CPU, chip on
+        TPU) — so the number is a model-fidelity signal. The raw
+        uncalibrated diff survives as ``rel_error_model``.
+
+        ``cache`` enables the persistent measurement cache
+        (:func:`repro.core.measure.resolve_cache` policies: ``True`` =
+        default path, a path, or a ``MeasurementCache``); repeated
+        sweeps then skip recompile+retime, with hits flagged on the
+        returned points. Keys include the core's DFG fingerprint; custom
+        ``run_factory`` back ends have no core to hash, so they must
+        pass ``cache_tag`` to identify the kernel (else caching is
+        skipped for them; on the codegen path the fingerprint always
+        wins and ``cache_tag`` is ignored).
 
         Default path: ``core`` (or the compiled core this explorer was
         built from) lowers to a :class:`~repro.core.codegen.StreamKernel`;
@@ -348,6 +395,7 @@ class Explorer:
         """
         import jax
 
+        from . import measure
         from .legalize import resolve_run_plan
 
         if sweep.target != "tpu":
@@ -356,7 +404,7 @@ class Explorer:
                 "model only; there is no Stratix V attached)"
             )
         halo = sweep.workload.halo
-        width = words = 0
+        fingerprint = cache_tag
         if run_factory is None:
             from .codegen import StreamKernel
 
@@ -372,6 +420,11 @@ class Explorer:
             )
             words, h, w = state.shape
             halo, width = kern.halo, w
+            # The DFG fingerprint always wins on this path — a cache_tag
+            # must never alias two structurally different cores onto one
+            # cache key (stale hits); tags are for run_factory back ends
+            # that have no SPD core to hash.
+            fingerprint = measure.core_fingerprint(kern)
 
             def run_factory(nsteps: int, m: int, block_h: int, d: int):
                 if d == 1:
@@ -388,8 +441,63 @@ class Explorer:
             if grid_shape is None:
                 raise ValueError("run_factory needs grid_shape=(h, w)")
             h, w = grid_shape
+            # Thread the concrete stripe geometry so this path gets the
+            # same VMEM legalization the codegen path does: the width is
+            # the grid's, the resident words come from the workload.
+            width, words = w, sweep.workload.words_in
         if max_devices is None:
             max_devices = jax.device_count()
+
+        mcache = measure.resolve_cache(cache)
+        if mcache is not None and fingerprint is None:
+            import warnings
+
+            warnings.warn(
+                "execute_frontier: measurement cache disabled — a custom "
+                "run_factory has no core fingerprint; pass cache_tag= to "
+                "identify the kernel",
+                RuntimeWarning,
+                stacklevel=2,
+            )
+            mcache = None
+        backend = measure.backend_descriptor()
+
+        cal_models: dict[int, object] = {}
+        cal_mem: list[float] = []  # bandwidth probe, shared across anchors
+
+        def _calibrated_model(d: int, fallback_plan: tuple[int, int]):
+            """Calibrated TPUModel for device count d (one probe per d).
+
+            When none of the default probe anchors has a legal plan on
+            this grid (e.g. a VMEM-tight width), the point's own
+            legalized ``(block_h, m)`` — which just legalized, so it
+            always works — becomes the anchor.
+            """
+            model = cal_models.get(d)
+            if model is None:
+                kw = dict(
+                    workload=sweep.workload,
+                    grid_shape=(h, w),
+                    halo=halo,
+                    width=width,
+                    words=words,
+                    d_values=(d,),
+                    interpret=interpret,
+                    reps=reps,
+                    warmup=warmup,
+                    cache=mcache,
+                    fingerprint=fingerprint,
+                    mem_gbs=cal_mem[0] if cal_mem else None,
+                )
+                try:
+                    cal = measure.calibrate_execution(run_factory, **kw)
+                except ValueError:
+                    kw["probe_plans"] = (fallback_plan,)
+                    cal = measure.calibrate_execution(run_factory, **kw)
+                if not cal_mem:
+                    cal_mem.append(cal.mem_gbs)
+                model = cal_models[d] = cal.model(d=d)
+            return model
 
         flops_per_elem = sweep.workload.flops_per_elem
         out: list[ExecutedPoint] = []
@@ -408,17 +516,28 @@ class Explorer:
             if run is None:
                 continue  # this back end cannot execute the point
 
-            jax.block_until_ready(run())  # compile + warm
-            t0 = time.perf_counter()
-            for _ in range(reps):
-                res = run()
-            jax.block_until_ready(res)
-            wall = (time.perf_counter() - t0) / reps
+            key = None
+            if mcache is not None:
+                key = measure.MeasurementCache.make_key(
+                    fingerprint, (h, w), (block_h, m, nsteps, d),
+                    backend, interpret, reps, warmup,
+                )
+            wall, cached = measure.measured_run(
+                run, key=key, cache=mcache, reps=reps, warmup=warmup,
+            )
 
             sites = h * w * nsteps
             mlups = sites / wall / 1e6
             measured = sites * flops_per_elem / wall / 1e9
             predicted = pt.sustained_gflops
+            calibrated = None
+            if calibrate:
+                # Predict the geometry actually run (legalized plan, not
+                # the raw lattice pick) under the measured constants.
+                calibrated = _calibrated_model(d, (block_h, m)).evaluate(
+                    sweep.workload, block_h, m, d=d,
+                ).sustained_gflops
+            headline = calibrated if calibrated is not None else predicted
             out.append(
                 ExecutedPoint(
                     point=pt,
@@ -431,10 +550,17 @@ class Explorer:
                     measured_gflops=measured,
                     predicted_gflops=predicted,
                     rel_error=(
-                        (predicted - measured) / predicted if predicted
+                        (headline - measured) / headline if headline
                         else 0.0
                     ),
                     interpret=interpret,
+                    calibrated_gflops=calibrated,
+                    rel_error_model=(
+                        (predicted - measured) / predicted if predicted
+                        else 0.0
+                    ),
+                    cached=cached,
+                    reps=reps,
                 )
             )
         if starved and len(out) < k:
@@ -467,12 +593,43 @@ class ExecutedPoint:
     m: int
     d: int  # device axis: shards the grid ran across (1 = single device)
     steps: int
-    wall_s: float
+    wall_s: float  # median-of-reps wall time (repro.core.measure.time_run)
     measured_mlups: float
     measured_gflops: float
-    predicted_gflops: float
-    rel_error: float  # (predicted - measured) / predicted
+    predicted_gflops: float  # uncalibrated model (TPU-v5e roofline constants)
+    rel_error: float  # (prediction - measured) / prediction, calibrated
+    #                   prediction when calibration ran, raw model otherwise
     interpret: bool
+    # Prediction under measured platform constants (docs/pipeline.md
+    # §measure); None when execute_frontier ran with calibrate=False.
+    calibrated_gflops: float | None = None
+    rel_error_model: float = 0.0  # always vs the uncalibrated model
+    cached: bool = False  # wall time came from the measurement cache
+    reps: int = 1
+
+    def as_dict(self) -> dict:
+        """JSON-ready record — the one serialization shared by the CLI's
+        ``--json`` report and ``benchmarks/dse_sweep.py``'s
+        ``BENCH_dse.json`` (one schema, extended in one place)."""
+        return {
+            "block_h": int(self.block_h),
+            "m": int(self.m),
+            "d": int(self.d),
+            "steps": int(self.steps),
+            "wall_s": float(self.wall_s),
+            "measured_mlups": float(self.measured_mlups),
+            "measured_gflops": float(self.measured_gflops),
+            "predicted_gflops": float(self.predicted_gflops),
+            "calibrated_gflops": (
+                None if self.calibrated_gflops is None
+                else float(self.calibrated_gflops)
+            ),
+            "rel_error": float(self.rel_error),
+            "rel_error_model": float(self.rel_error_model),
+            "cached": bool(self.cached),
+            "reps": int(self.reps),
+            "interpret": bool(self.interpret),
+        }
 
 
 def execute_frontier(
@@ -484,7 +641,7 @@ def execute_frontier(
     k: int = 3,
     steps: int | None = None,
     interpret: bool = True,
-    reps: int = 1,
+    reps: int = 3,
 ) -> list[ExecutedPoint]:
     """Deprecated: run TPU frontier points through ``lbm_stream``.
 
@@ -517,22 +674,32 @@ def execute_frontier(
     return Explorer(sweep.workload).execute_frontier(
         sweep, k=k, steps=steps, interpret=interpret, reps=reps,
         run_factory=run_factory, grid_shape=(f.shape[1], f.shape[2]),
+        cache_tag="lbm_stream",
     )
 
 
 def render_executed(points: Sequence[ExecutedPoint]) -> str:
-    """Markdown table of predicted-vs-measured frontier executions."""
+    """Markdown table of predicted-vs-measured frontier executions.
+
+    ``calib GF/s`` is the prediction under measured platform constants
+    (``-`` when calibration was off); ``rel err`` diffs against it when
+    present (docs/pipeline.md §measure). ``src`` is ``cache`` when the
+    wall time came from the measurement cache.
+    """
     head = (
-        "| block_h | m | d | steps | predicted GF/s | measured GF/s | MLUPS "
-        "| rel err | mode |\n"
-        "|---------|---|---|-------|----------------|---------------|-------"
-        "|---------|------|"
+        "| block_h | m | d | steps | model GF/s | calib GF/s | measured GF/s "
+        "| MLUPS | rel err | src | mode |\n"
+        "|---------|---|---|-------|------------|------------|---------------"
+        "|-------|---------|-----|------|"
     )
     rows = [
         f"| {e.block_h} | {e.m} | {e.d} | {e.steps} | "
-        f"{e.predicted_gflops:12.1f} | "
-        f"{e.measured_gflops:11.2f} | {e.measured_mlups:6.2f} | "
-        f"{e.rel_error:+.3f} | {'interpret' if e.interpret else 'tpu'} |"
+        f"{e.predicted_gflops:10.1f} | "
+        + (f"{e.calibrated_gflops:10.4g}" if e.calibrated_gflops is not None
+           else f"{'-':>10}")
+        + f" | {e.measured_gflops:13.4g} | {e.measured_mlups:6.2f} | "
+        f"{e.rel_error:+.3f} | {'cache' if e.cached else 'live'} | "
+        f"{'interpret' if e.interpret else 'tpu'} |"
         for e in points
     ]
     return "\n".join([head] + rows)

@@ -22,10 +22,15 @@ def lbm_run_for_point(f, attr, one_tau, point, *, steps: int | None = None,
                       u_lid=0.0, interpret: bool = True):
     """Advance the lattice using a DSE design point's (block_h, m).
 
-    See :func:`resolve_run_plan` for how the point is legalized.
+    See :func:`resolve_run_plan` for how the point is legalized — with
+    the concrete stripe geometry (the grid width and the 9 distribution
+    words + 1 attribute word resident per site), so the VMEM clamp
+    applies exactly as it does on the generic codegen path.
     Returns ``(result, (block_h, m))``.
     """
-    block_h, m, nsteps = resolve_run_plan(f.shape[1], point, steps)
+    block_h, m, nsteps = resolve_run_plan(
+        f.shape[1], point, steps, width=f.shape[2], words=f.shape[0] + 1,
+    )
     out = lbm_run_blocked(f, attr, one_tau, u_lid, steps=nsteps, m=m,
                           block_h=block_h, interpret=interpret)
     return out, (block_h, m)

@@ -70,6 +70,23 @@ def test_pareto_mask_single_objective_is_argmax():
     ]
 
 
+def test_pareto_mask_excludes_non_finite_rows():
+    """NaN compares False against everything, so a NaN row used to be
+    'never dominated' and polluted the frontier; non-finite rows must be
+    masked out up front — even an inf row that would dominate."""
+    pts = np.array(
+        [[np.nan, 1.0], [1.0, 2.0], [np.inf, 0.0], [2.0, 1.0]]
+    )
+    mask = pareto_mask(pts, maximize=(True, True))
+    assert mask.tolist() == [False, True, False, True]
+    assert not pareto_mask(np.full((3, 2), np.nan)).any()
+    # all-finite behavior is unchanged
+    ok = np.array([[1.0, 2.0], [2.0, 1.0], [0.5, 0.5]])
+    assert pareto_mask(ok, maximize=(True, True)).tolist() == [
+        True, True, False,
+    ]
+
+
 # ----------------------- batched == scalar -----------------------
 
 
@@ -146,8 +163,10 @@ def test_tpu_batched_matches_scalar_point_for_point(explorer):
             assert sweep.data[key][i] == pytest.approx(want, rel=1e-12), (
                 key, bh, m, chips,
             )
+        # one spelling for the binding resource, scalar ≡ batch verbatim
         bound = str(sweep.data["bound"][i])
-        assert f"{bound}-bound" in pt.limits
+        assert bound.endswith("-bound")
+        assert bound in pt.limits
 
 
 # ----------------------- frontier properties -----------------------
@@ -243,6 +262,32 @@ def test_tpu_default_sweep_enumerates_device_axis(explorer):
     assert best.m > 1  # ...but temporal blocking still pays
 
 
+def test_tpu_sweep_point_threads_d_and_scalar_kwargs(explorer):
+    """Sweep.point must re-materialize TPU points via the d= spelling
+    and thread scalar kwargs (double_buffer) like the FPGA branch does
+    — it used to drop both, silently diverging from the batch arrays."""
+    sweep = explorer.sweep_tpu(
+        bh_values=(8, 16), m_values=(2,), d_values=(1, 2),
+        double_buffer=False,
+    )
+    assert sweep.scalar_kwargs == {"double_buffer": False}
+    model = TPUModel()
+    for i in range(len(sweep)):
+        pt = sweep.point(i)
+        d = int(sweep.data["d"][i])
+        assert pt.n == d and pt.detail["d"] == d  # device axis preserved
+        want = model.evaluate(
+            LBM_W,
+            int(sweep.data["block_rows"][i]),
+            int(sweep.data["m"][i]),
+            d=d,
+            double_buffer=False,
+        )
+        # double_buffer reached both the batch arrays and the scalar path
+        assert pt.detail["vmem_bytes"] == want.detail["vmem_bytes"]
+        assert sweep.data["vmem_bytes"][i] == want.detail["vmem_bytes"]
+
+
 def test_top_returns_k_best_feasible(explorer):
     sweep = explorer.sweep_fpga()
     top2 = sweep.top(2, key="perf_per_watt")
@@ -289,6 +334,44 @@ def test_blocking_plan_legalizes():
 
 
 # ----------------------- execution loop (interpret mode) -----------------------
+
+
+def test_run_factory_path_gets_vmem_stripe_check(explorer):
+    """Regression (ISSUE 4): the custom run_factory path used to call
+    resolve_run_plan with width=0, words=0, silently skipping the VMEM
+    stripe clamp the codegen path gets. On a 30000-wide grid the
+    (64, 8) stripe is over budget, so both paths must legalize it down
+    identically."""
+    from repro.core.legalize import resolve_run_plan, stripe_vmem_bytes
+
+    sweep = explorer.sweep_tpu(
+        bh_values=(64,), m_values=(8,), d_values=(1,)
+    )
+    seen = []
+
+    def rf(nsteps, m, block_h, d):
+        seen.append((block_h, m, nsteps, d))
+        return lambda: None
+
+    h, w = 256, 30_000
+    runs = explorer.__class__(sweep.workload).execute_frontier(
+        sweep, run_factory=rf, grid_shape=(h, w), k=1, reps=1,
+        calibrate=False,
+    )
+    assert len(runs) == 1 and seen
+    r = runs[0]
+    assert r.block_h < 64  # the over-budget stripe was clamped
+    from repro.core.legalize import VMEM_BYTES
+
+    assert stripe_vmem_bytes(
+        r.block_h, r.m, w, sweep.workload.words_in, sweep.workload.halo
+    ) <= VMEM_BYTES
+    want = resolve_run_plan(
+        h, r.point, None, halo=sweep.workload.halo, width=w,
+        words=sweep.workload.words_in, d=1,
+    )
+    assert (r.block_h, r.m, r.steps) == want  # identical to codegen path
+    assert seen[-1] == (r.block_h, r.m, r.steps, 1)
 
 
 def test_execute_frontier_closes_the_loop():
