@@ -8,24 +8,27 @@ driven end-to-end by ``repro.core.explorer``:
    the device axis (y-sharding with halo exchange,
    ``repro.core.distribute``) — its frontier, and the model<->measurement
    loop: the top-k frontier points *executed* through the codegen'd uLBM
-   Pallas kernel via the single timing path
-   (``Explorer.execute_frontier``); d > 1 points run sharded when the
-   platform has the devices and are skipped otherwise. Measurements use
-   the honest policy of ``repro.core.measure`` (docs/pipeline.md
-   §measure): median-of-reps timing with per-rep synchronization,
-   *backend-calibrated* predictions — off-TPU the calibration anchors
-   the model to the Pallas interpreter's measured throughput, so
-   ``rel_error`` is a model-fidelity signal instead of the old
-   meaningless host-vs-TPU speed ratio (≈ 0.9999 on every point) — and
-   the persistent measurement cache, whose hit/miss stats land in the
-   JSON (a repeated benchmark run re-times nothing).
+   Pallas kernel via the search subsystem's single measurement engine
+   (``Explorer.search``, docs/pipeline.md §search); d > 1 points run
+   sharded when the platform has the devices and are skipped otherwise.
+   Measurements use the honest policy of ``repro.core.measure``
+   (docs/pipeline.md §measure): median-of-reps timing with per-rep
+   synchronization, *backend-calibrated* predictions — off-TPU the
+   calibration anchors the model to the Pallas interpreter's measured
+   throughput, so ``rel_error`` is a model-fidelity signal instead of
+   the old meaningless host-vs-TPU speed ratio (≈ 0.9999 on every
+   point) — and the persistent measurement cache, whose hit/miss stats
+   land in the JSON (a repeated benchmark run re-times nothing).
+   An **autotune smoke** then runs the budgeted strategies (LocalRefine,
+   SuccessiveHalving) under a hard budget of ≤ 12 measurements each and
+   hard-fails if a strategy overspends.
 3. LM mesh planner: (dp, tp, pp) ranking for a transformer arch — the
    paper's spatial/temporal trade lifted to the fleet (DESIGN.md §4).
 
 Invoked as a script this also writes ``BENCH_dse.json`` next to the repo
 root — best point, sustained GFLOPS, calibrated predicted-vs-measured
-error and cache stats per app — so the performance trajectory is
-recorded across PRs.
+error, search ``strategy``/``budget_spent`` metadata and cache stats per
+app — so the performance trajectory stays comparable across PRs.
 """
 
 from __future__ import annotations
@@ -38,7 +41,12 @@ from repro.apps import lbm
 from repro.core.explorer import render_executed
 from repro.core.measure import MeasurementCache, calibrate_backend
 from repro.core.planner import ArchStats, plan, render_plans
+from repro.core.search import ExhaustiveSearch
 from repro.configs import get_arch
+
+#: Hard cap on live measurements for the autotune smoke (sweep 2e): the
+#: budgeted strategies must stay within it or the benchmark fails.
+AUTOTUNE_BUDGET = 12
 
 # Interpret-mode execution is host-speed; measure on a small lattice so the
 # whole benchmark stays in seconds — but tall enough (256 rows) that the
@@ -109,11 +117,17 @@ def run(topk: int = 3, interpret: bool = True, reps: int = 3,
                            d_values=exec_d)
     f0, attr, _ = lbm.taylor_green_init(MEASURE_H, MEASURE_W)
     mstate, mregs = msim.stream_state(f0, attr), msim.stream_regs()
-    runs = mex.execute_frontier(
-        msweep, mstate, mregs, k=topk, interpret=interpret, reps=reps,
-        calibrate=True, cache=cache,
+    mres = mex.search(
+        msweep, mstate, mregs,
+        strategy=ExhaustiveSearch(k=topk, frontier_only=True),
+        interpret=interpret, reps=reps, calibrate=True, cache=cache,
     )
+    runs = mres.executed
     out.append(render_executed(runs))
+    out.append(
+        f"(strategy={mres.strategy}: {mres.budget_spent} live "
+        f"measurement(s) spent)"
+    )
     if interpret:
         out.append(
             "(interpret mode: the calib column anchors the model to the "
@@ -133,10 +147,12 @@ def run(topk: int = 3, interpret: bool = True, reps: int = 3,
     dsweep = dex.sweep_tpu(bh_values=(8, 16, 32, 64), m_values=(1, 2, 4, 8),
                            d_values=exec_d)
     u0, _ = dif.sine_init(MEASURE_H, MEASURE_W)
-    druns = dex.execute_frontier(
-        dsweep, dsim.state(u0), (dsim.alpha,), k=topk, interpret=interpret,
-        reps=reps, calibrate=True, cache=cache,
+    dres = dex.search(
+        dsweep, dsim.state(u0), (dsim.alpha,),
+        strategy=ExhaustiveSearch(k=topk, frontier_only=True),
+        interpret=interpret, reps=reps, calibrate=True, cache=cache,
     )
+    druns = dres.executed
     out.append(render_executed(druns))
     out.append(
         f"(no hand-written kernel: {len(dsim.kernel.summary.offsets)} "
@@ -171,6 +187,52 @@ def run(topk: int = 3, interpret: bool = True, reps: int = 3,
             "served from cache"
         )
 
+    # Autotune smoke (docs/pipeline.md §search): the budgeted strategies
+    # search the same uLBM lattice measured-in-the-loop under a hard cap
+    # of AUTOTUNE_BUDGET live measurements each. Overspending is a
+    # regression, not a printout. Sharing the measurement cache with the
+    # frontier pass above is the intended composition: plans the
+    # exhaustive walk already timed are free, so the strategies' budget
+    # goes to the plans only they propose.
+    out.append(
+        f"\n## DSE sweep 2e: autotune smoke — measured-in-the-loop "
+        f"search, hard budget {AUTOTUNE_BUDGET} measurements/strategy"
+    )
+    exhaustive_best = max(e.measured_gflops for e in runs) if runs else 0.0
+    autotune: dict = {"budget": AUTOTUNE_BUDGET}
+    for strat in ("refine", "halving"):
+        sres = mex.search(
+            msweep, mstate, mregs, strategy=strat, budget=AUTOTUNE_BUDGET,
+            interpret=interpret, reps=reps, calibrate=True, cache=cache,
+        )
+        if sres.budget_spent > AUTOTUNE_BUDGET:
+            raise RuntimeError(
+                f"autotune budget regression: strategy {strat!r} spent "
+                f"{sres.budget_spent} > {AUTOTUNE_BUDGET} measurements"
+            )
+        b = sres.best
+        ratio = (
+            b.measured_gflops / exhaustive_best
+            if b is not None and exhaustive_best else 0.0
+        )
+        out.append(
+            f"  {strat}: best "
+            + (f"(block_h={b.block_h}, m={b.m}, d={b.d}) "
+               f"{b.measured_gflops:.4g} GF/s measured"
+               if b is not None else "n/a")
+            + f" ({ratio:.2f}x the exhaustive frontier best), "
+            f"{sres.budget_spent}/{AUTOTUNE_BUDGET} budget spent, "
+            f"{len(sres.executed)} point(s) measured"
+        )
+        autotune[strat] = {
+            "strategy": sres.strategy,
+            "budget": sres.budget,
+            "budget_spent": sres.budget_spent,
+            "vs_exhaustive_best": float(ratio),
+            "best": None if b is None else b.as_dict(),
+            "measurements": sres.measurements,
+        }
+
     out.append("\n## DSE sweep 3: LM mesh planner (granite-34b, 256 chips)")
     g = get_arch("granite-34b")
     stats = ArchStats(
@@ -195,8 +257,8 @@ def run(topk: int = 3, interpret: bool = True, reps: int = 3,
                      "perf_per_watt": float(best.perf_per_watt)},
             "paper_best": {"n": 1, "m": 4, "perf_per_watt": 2.416},
         }
-        for name, app_ex, rr in (("lbm", mex, runs),
-                                 ("diffusion", dex, druns)):
+        for name, app_ex, sr in (("lbm", mex, mres),
+                                 ("diffusion", dex, dres)):
             # The recorded best comes from the *model* lattice over the
             # full device axis — machine-independent, so the committed
             # PR-over-PR trajectory doesn't move with how many devices
@@ -209,8 +271,15 @@ def run(topk: int = 3, interpret: bool = True, reps: int = 3,
                 "best": {"d": int(b.n), "m": int(b.m),
                          "block_h": int(b.detail["block_rows"]),
                          "sustained_gflops": float(b.sustained_gflops)},
-                "executed": [e.as_dict() for e in rr],
+                "executed": [e.as_dict() for e in sr.executed],
+                "search": {
+                    "strategy": sr.strategy,
+                    "budget": sr.budget,
+                    "budget_spent": sr.budget_spent,
+                    "measurements": sr.measurements,
+                },
             }
+        bench["autotune"] = autotune
         bench["grid"] = [MEASURE_H, MEASURE_W]
         bench["exec_d"] = [int(d) for d in exec_d]
         bench["interpret"] = bool(interpret)

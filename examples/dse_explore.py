@@ -14,10 +14,12 @@ or, after ``pip install -e .``, simply ``repro-explore``. Use
 ``--topk`` to execute more frontier points, ``--devices N`` to sweep the
 device axis d (multi-chip sharding with halo exchange; off-TPU force
 host devices with ``XLA_FLAGS=--xla_force_host_platform_device_count=N``
-so d > 1 frontier points actually run), and ``--json PATH`` to dump the
-results for scripting. The implementation lives in :mod:`repro.cli` so
-the installed console script and this checkout script stay one code
-path.
+so d > 1 frontier points actually run), ``--strategy refine|halving``
+with ``--budget N`` to autotune measured-in-the-loop under a hard
+measurement budget (docs/pipeline.md §search), and ``--json PATH`` to
+dump the results — including strategy/budget accounting — for
+scripting. The implementation lives in :mod:`repro.cli` so the
+installed console script and this checkout script stay one code path.
 """
 
 from repro.cli import explore_main

@@ -6,11 +6,18 @@ running it straight from a checkout. The flow is the paper's workflow as
 a tool — compile SPD cores, sweep both target models in batched NumPy
 (including the device axis ``d``, docs/pipeline.md §distribute), extract
 Pareto frontiers, and execute TPU frontier points through real Pallas
-kernels via the one timing path, ``Explorer.execute_frontier``
-(docs/pipeline.md §execute): single-device points run the codegen'd
-kernel directly, ``d > 1`` points run sharded with halo exchange when the
-platform has the devices. ``--devices N`` caps the swept d axis,
-``--json PATH`` dumps the machine-readable results for scripting.
+kernels via the pluggable search subsystem, ``Explorer.search``
+(docs/pipeline.md §execute, §search): ``--strategy`` picks how the
+measurement budget is spent — ``exhaustive`` walks the Pareto frontier
+top-down (the default), ``refine`` hill-climbs the (block_h, m, d)
+neighborhood of the model's best points, ``halving`` races a wide
+model-ranked pool with cheap screening reps and full-rep finals —
+and ``--budget N`` caps live measurements hard. Single-device points
+run the codegen'd kernel directly, ``d > 1`` points run sharded with
+halo exchange when the platform has the devices. ``--devices N`` caps
+the swept d axis, ``--json PATH`` dumps the machine-readable results
+(including ``strategy``, ``budget_spent``, and per-candidate
+measurement counts) for scripting.
 
 Measurement policy (docs/pipeline.md §measure): runs are timed with the
 honest harness (``--reps`` median-of-reps, every rep synchronized), the
@@ -46,13 +53,17 @@ def explore_main(argv: list[str] | None = None) -> None:
     from repro.core.distribute import device_axis_values
     from repro.core.explorer import render_executed
     from repro.core.planner import ArchStats, plan, render_plans
+    from repro.core.search import STRATEGIES, ExhaustiveSearch
 
     ap = argparse.ArgumentParser(prog="repro-explore", description=__doc__)
     ap.add_argument("--arch", default="granite-34b")
     ap.add_argument("--chips", type=int, default=256)
     ap.add_argument("--batch", type=int, default=256)
     ap.add_argument("--seq", type=int, default=4096)
-    ap.add_argument("--topk", type=int, default=2)
+    ap.add_argument("--topk", type=int, default=2,
+                    help="frontier points to execute with --strategy "
+                         "exhaustive; refine/halving choose their own "
+                         "candidate counts (bound them with --budget)")
     ap.add_argument("--devices", type=int, default=4, metavar="N",
                     help="sweep the device axis d over powers of two up to "
                          "N (execution shards onto real devices; off-TPU "
@@ -62,6 +73,16 @@ def explore_main(argv: list[str] | None = None) -> None:
                     help="write the sweep/execution results as JSON")
     ap.add_argument("--no-execute", action="store_true",
                     help="skip the (host-speed) interpret-mode Pallas runs")
+    ap.add_argument("--strategy", default="exhaustive",
+                    choices=sorted(STRATEGIES),
+                    help="search strategy for the measured sweep "
+                         "(docs/pipeline.md §search): exhaustive = walk "
+                         "the Pareto frontier top-down, refine = "
+                         "model-seeded (block_h, m, d) hill-climb, "
+                         "halving = budgeted successive halving")
+    ap.add_argument("--budget", type=int, default=None, metavar="N",
+                    help="hard cap on live measurements per app search "
+                         "(cache hits are free; default: unbudgeted)")
     ap.add_argument("--reps", type=int, default=3, metavar="N",
                     help="measured timing reps per executed point (median "
                          "is reported; every rep is synchronized)")
@@ -122,27 +143,37 @@ def explore_main(argv: list[str] | None = None) -> None:
         # measurement grid the model drops d=1 off the frontier, so an
         # uncapped sweep leaves a single-device machine nothing to time.
         exec_d = device_axis_values(min(args.devices, jax.device_count()))
+        # The default strategy reproduces the original behavior: walk
+        # the Pareto frontier until --topk points executed. The others
+        # (--strategy refine/halving) search measured-in-the-loop under
+        # the --budget cap (docs/pipeline.md §search).
+        if args.strategy == "exhaustive":
+            strategy = ExhaustiveSearch(k=args.topk, frontier_only=True)
+        else:
+            strategy = args.strategy
         print()
         print("=" * 72)
-        print(f"3) Model -> measurement: top-{args.topk} frontier points "
-              f"through the codegen'd")
-        print("   uLBM Pallas kernel (interpret mode, 256x128; d>1 points "
-              "run sharded —")
-        print("   the grid is tall enough that sharding beats the halo "
-              "exchange)")
+        print(f"3) Model -> measurement: --strategy {args.strategy} "
+              f"(budget: {args.budget if args.budget else 'none'}) over the")
+        print("   codegen'd uLBM Pallas kernel (interpret mode, 256x128; "
+              "d>1 points run")
+        print("   sharded — the grid is tall enough that sharding beats "
+              "the halo exchange)")
         print("=" * 72)
         msim = lbm.LBMSimulation(lbm.LBMProblem(256, 128, mode="wrap"))
         mex = msim.explorer()
         msweep = mex.sweep_tpu(bh_values=(8, 16, 32, 64),
                                m_values=(1, 2, 4, 8), d_values=exec_d)
         f0, attr, _ = lbm.taylor_green_init(256, 128)
-        runs = mex.execute_frontier(
+        mres = mex.search(
             msweep, msim.stream_state(f0, attr), msim.stream_regs(),
-            k=args.topk, interpret=True, reps=args.reps,
-            calibrate=args.calibrate, cache=mcache,
+            strategy=strategy, budget=args.budget, interpret=True,
+            reps=args.reps, calibrate=args.calibrate, cache=mcache,
         )
-        print(render_executed(runs))
-        report["lbm"] = {"executed": [e.as_dict() for e in runs]}
+        print(render_executed(mres.executed))
+        print(f"(strategy={mres.strategy}: {mres.budget_spent} live "
+              f"measurement(s), {len(mres.executed)} point(s) executed)")
+        report["lbm"] = mres.as_dict()
 
         print()
         print("=" * 72)
@@ -154,20 +185,22 @@ def explore_main(argv: list[str] | None = None) -> None:
         dsweep = dex.sweep_tpu(bh_values=(8, 16, 32, 64),
                                m_values=(1, 2, 4, 8), d_values=exec_d)
         u0, _ = dif.sine_init(256, 128)
-        druns = dex.execute_frontier(dsweep, dsim.state(u0), (dsim.alpha,),
-                                     k=args.topk, interpret=True,
-                                     reps=args.reps,
-                                     calibrate=args.calibrate, cache=mcache)
-        print(render_executed(druns))
+        dres = dex.search(dsweep, dsim.state(u0), (dsim.alpha,),
+                          strategy=strategy, budget=args.budget,
+                          interpret=True, reps=args.reps,
+                          calibrate=args.calibrate, cache=mcache)
+        print(render_executed(dres.executed))
+        print(f"(strategy={dres.strategy}: {dres.budget_spent} live "
+              f"measurement(s), {len(dres.executed)} point(s) executed)")
         halo = dsim.kernel.summary
         print(f"(inferred stencil: {len(halo.offsets)} offsets, "
               f"halo = {halo.halo_y} row/step — no hand-written kernel)")
-        report["diffusion"] = {
-            "executed": [e.as_dict() for e in druns],
-        }
+        report["diffusion"] = dres.as_dict()
         report["measure"] = {
             "reps": args.reps,
             "calibrate": bool(args.calibrate),
+            "strategy": args.strategy,
+            "budget": args.budget,
             "cache": None if mcache is None else mcache.stats(),
         }
         if mcache is not None:

@@ -7,8 +7,14 @@ from .compiler import CompiledCore, HardwareReport, Registry, SPDCompileError
 from .dfg import Core, Node, SPDError, SPDGraphError, schedule
 from .distribute import ShardedStreamKernel, device_axis_values, ring_mesh
 from .dse import DesignPoint, FPGAModel, StreamWorkload, TPUModel
-from .explorer import Explorer, Sweep, execute_frontier, pareto_mask
-from .legalize import VMEM_BYTES, blocking_plan, resolve_run_plan, shard_height
+from .explorer import Explorer, Sweep, pareto_mask
+from .legalize import (
+    VMEM_BYTES,
+    blocking_plan,
+    legal_block_values,
+    resolve_run_plan,
+    shard_height,
+)
 from .library import LibraryModule, default_registry_modules
 from .measure import (
     BackendCalibration,
@@ -17,6 +23,16 @@ from .measure import (
     calibrate_execution,
     core_fingerprint,
     time_run,
+)
+from .search import (
+    ExecutedPoint,
+    ExhaustiveSearch,
+    LocalRefine,
+    SearchResult,
+    SearchRunner,
+    SearchStrategy,
+    SuccessiveHalving,
+    get_strategy,
 )
 from .spd import SPDParseError, parse_spd, parse_spd_file
 from .transforms import (
@@ -32,8 +48,11 @@ __all__ = [
     "CompiledCore",
     "Core",
     "DesignPoint",
+    "ExecutedPoint",
+    "ExhaustiveSearch",
     "Explorer",
     "FPGAModel",
+    "LocalRefine",
     "HardwareReport",
     "LibraryModule",
     "MeasurementCache",
@@ -43,10 +62,14 @@ __all__ = [
     "SPDError",
     "SPDGraphError",
     "SPDParseError",
+    "SearchResult",
+    "SearchRunner",
+    "SearchStrategy",
     "ShardedStreamKernel",
     "StencilSummary",
     "StreamKernel",
     "StreamWorkload",
+    "SuccessiveHalving",
     "Sweep",
     "TPUModel",
     "VMEM_BYTES",
@@ -56,7 +79,8 @@ __all__ = [
     "core_fingerprint",
     "default_registry_modules",
     "device_axis_values",
-    "execute_frontier",
+    "get_strategy",
+    "legal_block_values",
     "pareto_mask",
     "parse_spd",
     "parse_spd_file",

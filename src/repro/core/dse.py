@@ -406,19 +406,14 @@ class TPUModel:
         w: StreamWorkload,
         bh: int,
         m: int,
-        n_chips: int = 1,
+        d: int = 1,
         double_buffer: bool = True,
-        *,
-        d: int | None = None,
     ) -> DesignPoint:
         """One (block_h, m, d) design point. ``d`` is the device axis —
         the number of chips the grid is sharded across along y
-        (docs/pipeline.md §distribute); ``n_chips`` is the historical
-        spelling of the same coordinate and ``d`` wins when both are
-        given."""
+        (docs/pipeline.md §distribute)."""
         t = self.target
-        d = int(n_chips if d is None else d)
-        n_chips = d
+        d = int(d)
         pt = DesignPoint(n=d, m=m, feasible=True)
         grid_w = w.grid_w or int(math.sqrt(w.elems))
         bytes_per_elem = 4 * (w.words_in + w.words_out)
@@ -445,18 +440,18 @@ class TPUModel:
         # Halo overhead: the 2·m·halo halo rows are recomputed per block.
         useful = bh / (bh + 2 * m * w.halo)
         flops = w.elems * w.flops_per_elem * m / useful  # incl. recompute
-        t_compute = flops / (n_chips * t.vpu_f32_tflops * 1e12)
-        t_memory = w.elems * bytes_per_elem / (n_chips * t.hbm_gbs * 1e9)
+        t_compute = flops / (d * t.vpu_f32_tflops * 1e12)
+        t_memory = w.elems * bytes_per_elem / (d * t.hbm_gbs * 1e9)
         # Cross-chip halo exchange (spatial split): 2·m·halo rows/neighbor.
         halo_bytes = 0.0
-        if n_chips > 1:
+        if d > 1:
             halo_bytes = 2 * 2 * m * w.halo * grid_w * w.words_in * 4
         t_coll = halo_bytes / (t.ici_gbs_per_link * 1e9)
 
         step_time = max(t_compute, t_memory, t_coll)
         useful_flops = w.elems * w.flops_per_elem * m
         sustained = useful_flops / step_time / 1e9 if step_time > 0 else 0.0
-        peak = n_chips * t.vpu_f32_tflops * 1e3  # GFlop/s
+        peak = d * t.vpu_f32_tflops * 1e3  # GFlop/s
         # One spelling for the binding resource, shared verbatim with
         # evaluate_batch's data["bound"] (asserted in tests/test_explorer).
         bound = (
@@ -468,7 +463,7 @@ class TPUModel:
         pt.peak_gflops = peak
         pt.sustained_gflops = sustained
         pt.utilization = sustained / peak if peak else 0.0
-        pt.power_w = n_chips * (
+        pt.power_w = d * (
             t.chip_idle_w + (t.chip_peak_w - t.chip_idle_w) * pt.utilization
         )
         pt.perf_per_watt = sustained / pt.power_w if pt.power_w > 0 else 0.0
@@ -490,23 +485,20 @@ class TPUModel:
         w: StreamWorkload,
         bh,
         m,
-        n_chips=1,
+        d=1,
         double_buffer: bool = True,
-        *,
-        d=None,
     ) -> dict[str, np.ndarray]:
         """Vectorized :meth:`evaluate` over ``bh``/``m``/``d`` arrays.
 
         Coordinates broadcast against each other; returns a dict of arrays
         in the broadcast shape, numerically identical to the scalar path.
-        ``d`` is the device axis (``n_chips`` kept as the historical
-        spelling); the returned dict carries it under both ``"n"`` and
-        ``"d"``.
+        ``d`` is the device axis; the returned dict carries it under both
+        ``"n"`` and ``"d"``.
         """
         t = self.target
         bh = np.asarray(bh, dtype=np.int64)
         m = np.asarray(m, dtype=np.int64)
-        chips = np.asarray(n_chips if d is None else d, dtype=np.int64)
+        chips = np.asarray(d, dtype=np.int64)
         bh, m, chips = np.broadcast_arrays(bh, m, chips)
         grid_w = w.grid_w or int(math.sqrt(w.elems))
         bytes_per_elem = 4 * (w.words_in + w.words_out)
@@ -568,10 +560,10 @@ class TPUModel:
         w: StreamWorkload,
         bh_values: Iterable[int] = (8, 16, 32, 64, 128, 256),
         m_values: Iterable[int] = (1, 2, 4, 8, 16, 32),
-        n_chips: int = 1,
+        d: int = 1,
     ) -> list[DesignPoint]:
         pts = [
-            self.evaluate(w, bh, m, n_chips)
+            self.evaluate(w, bh, m, d)
             for bh in bh_values
             for m in m_values
         ]

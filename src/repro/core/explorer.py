@@ -12,14 +12,16 @@ point at a time, the explorer
    (:meth:`FPGAModel.evaluate_batch` / :meth:`TPUModel.evaluate_batch`);
 2. extracts the Pareto frontier over (throughput, perf/W, resource use)
    with a vectorized dominance check (:func:`pareto_mask`);
-3. for the TPU target, *executes* the top-k frontier points through a
-   real Pallas kernel (interpret mode off-TPU) and reports
-   predicted-vs-measured error per point. :meth:`Explorer.execute_frontier`
-   is the single timing/legalization path: any codegen'd SPD core runs
-   through it — single-device or sharded across ``d`` devices with halo
-   exchange (``repro.core.distribute``) — and the hand-written
-   ``lbm_stream`` kernel's deprecated module-level
-   :func:`execute_frontier` delegates to it via ``run_factory``. All
+3. for the TPU target, *searches* the lattice with measurement in the
+   loop: :meth:`Explorer.search` hands the sweep to a pluggable
+   :class:`~repro.core.search.SearchStrategy`
+   (docs/pipeline.md §search) driving the one legalize→run→time engine,
+   :class:`~repro.core.search.SearchRunner` — any codegen'd SPD core
+   runs through it, single-device or sharded across ``d`` devices with
+   halo exchange (``repro.core.distribute``) — under an optional hard
+   measurement budget. :meth:`Explorer.execute_frontier` is the
+   original top-k frontier walk, now a thin facade over
+   ``search(strategy=ExhaustiveSearch(k, frontier_only=True))``. All
    plans legalize through the shared :mod:`repro.core.legalize`;
    timing, backend calibration (the prediction is held against the
    platform actually running, so ``rel_error`` is a model-fidelity
@@ -45,13 +47,22 @@ from .dse import (
     TPUModel,
     render_table,
 )
+from .search import (
+    ExecutedPoint,
+    ExhaustiveSearch,
+    SearchResult,
+    SearchRunner,
+    get_strategy,
+    kernel_run_factory,
+)
 
 __all__ = [
     "ExecutedPoint",
     "Explorer",
+    "SearchResult",
     "Sweep",
-    "execute_frontier",
     "pareto_mask",
+    "render_executed",
 ]
 
 
@@ -228,9 +239,10 @@ class Explorer:
     :class:`~repro.core.compiler.HardwareReport`, or anything with a
     ``hardware_report`` attribute (``CompiledCore``, ``LBMSimulation``);
     for the latter two, ``elems`` (stream length) must be given. When the
-    source is (or ``core`` names) a compiled core, TPU frontier points
+    source is (or ``core`` names) a compiled core, TPU lattice points
     can be executed through its codegen'd Pallas kernel with
-    :meth:`execute_frontier` (docs/pipeline.md §execute).
+    :meth:`search` / :meth:`execute_frontier`
+    (docs/pipeline.md §execute, §search).
     """
 
     def __init__(
@@ -281,27 +293,15 @@ class Explorer:
         bh_values: Sequence[int] = (8, 16, 32, 64, 128, 256),
         m_values: Sequence[int] = (1, 2, 4, 8, 16, 32),
         d_values: Sequence[int] = (1, 2, 4),
-        chip_values: Sequence[int] | None = None,
         double_buffer: bool = True,
     ) -> Sweep:
         """Evaluate the (block_h, m, d) lattice in one batched call.
 
         ``d`` is the device axis — chips the grid is sharded across
-        along y (docs/pipeline.md §distribute); ``chip_values`` is the
-        deprecated spelling and wins when given. ``double_buffer``
+        along y (docs/pipeline.md §distribute). ``double_buffer``
         threads through to both the batched evaluation and the scalar
         ``Sweep.point`` re-materialization.
         """
-        if chip_values is not None:
-            import warnings
-
-            warnings.warn(
-                "sweep_tpu(chip_values=...) is deprecated; use d_values= "
-                "(the device axis, docs/pipeline.md §distribute)",
-                DeprecationWarning,
-                stacklevel=2,
-            )
-            d_values = chip_values
         bh, m, d = np.meshgrid(
             np.asarray(bh_values, np.int64),
             np.asarray(m_values, np.int64),
@@ -324,7 +324,159 @@ class Explorer:
             return self.sweep_tpu(**kw)
         raise ValueError(f"unknown target {target!r} (want 'fpga' or 'tpu')")
 
-    # ---- model -> measurement (the single timing/legalization path) --------
+    # ---- model -> measurement (the pluggable search subsystem) -------------
+
+    def search(
+        self,
+        sweep: "Sweep",
+        state=None,
+        regs: Sequence = (),
+        *,
+        strategy="exhaustive",
+        budget: int | None = None,
+        core=None,
+        steps: int | None = None,
+        interpret: bool = True,
+        reps: int = 3,
+        warmup: int = 1,
+        calibrate: bool = True,
+        cache=None,
+        cache_tag: str | None = None,
+        run_factory=None,
+        grid_shape: tuple[int, int] | None = None,
+        max_devices: int | None = None,
+        timer=None,
+    ) -> SearchResult:
+        """Search the TPU lattice with measurement in the loop.
+
+        The facade over :mod:`repro.core.search`
+        (docs/pipeline.md §search): ``strategy`` — a name
+        (``"exhaustive"`` / ``"refine"`` / ``"halving"``), class, or
+        :class:`~repro.core.search.SearchStrategy` instance — decides
+        which (n, m, d, block_h) candidates to spend measurements on
+        (the default, ``"exhaustive"``, measures the model's Pareto
+        frontier — a handful of points — not the whole lattice; the
+        full-lattice reference is
+        ``ExhaustiveSearch(frontier_only=False)``, asked for
+        explicitly); every measurement goes through one
+        :class:`~repro.core.search.SearchRunner`
+        (docs/pipeline.md §execute): legalized by the shared
+        :func:`repro.core.legalize.resolve_run_plan` (per shard when the
+        point's device axis ``d > 1``, and always with the concrete
+        stripe geometry, so the VMEM clamp applies identically on the
+        codegen and ``run_factory`` paths), executed, and timed with the
+        honest harness :func:`repro.core.measure.time_run` — ``warmup``
+        un-timed compile calls, ``reps`` measured calls each
+        individually ``block_until_ready``'d, median wall time.
+        Distinct lattice points that legalize to the same concrete plan
+        are timed once per search.
+
+        ``budget`` is a **hard cap on live measurements** for this
+        invocation: once spent, the strategy is cut off mid-flight and
+        the result carries whatever was measured. Cache hits and in-run
+        dedupe hits are free — strategies compose across invocations
+        through the shared :class:`~repro.core.measure.MeasurementCache`
+        (``cache=True``/path/instance), whose keys include the core's
+        DFG fingerprint; custom ``run_factory`` back ends have no core
+        to hash, so they must pass ``cache_tag`` to identify the kernel
+        (else caching is skipped for them; on the codegen path the
+        fingerprint always wins and ``cache_tag`` is ignored).
+
+        With ``calibrate=True`` (the default) the platform is probed
+        through the same execution path
+        (:func:`repro.core.measure.calibrate_execution`, one anchor per
+        device-axis value encountered; probes are shared overhead, not
+        charged against ``budget``) and each point's ``rel_error`` is
+        reported against the *calibrated* prediction — the throughput of
+        the backend actually running (Pallas interpreter on CPU, chip on
+        TPU) — so the number is a model-fidelity signal. The raw
+        uncalibrated diff survives as ``rel_error_model``.
+
+        Default back end: ``core`` (or the compiled core this explorer
+        was built from) lowers to a
+        :class:`~repro.core.codegen.StreamKernel`; ``state`` is the
+        stacked ``(P, H, W)`` grid and ``regs`` the core's
+        ``Append_Reg`` values. Points with ``d > 1`` run through
+        :class:`repro.core.distribute.ShardedStreamKernel` on a
+        ``d``-ring mesh (docs/pipeline.md §distribute); points needing
+        more devices than the platform has (``max_devices``, default
+        ``jax.device_count()``) are skipped. Custom back ends plug in
+        via ``run_factory(nsteps, m, block_h, d) -> nullary-callable |
+        None`` plus the concrete ``grid_shape=(h, w)``; returning
+        ``None`` skips the point. ``timer`` injects the timing
+        primitive (tests drive whole strategies with a deterministic
+        fake).
+        """
+        from . import measure
+
+        if sweep.target != "tpu":
+            raise ValueError(
+                "search needs a TPU sweep (the FPGA target is a model "
+                "only; there is no Stratix V attached)"
+            )
+        halo = sweep.workload.halo
+        fingerprint = cache_tag
+        if run_factory is None:
+            from .codegen import StreamKernel
+
+            core = core if core is not None else self.core
+            if core is None:
+                raise ValueError(
+                    "Explorer.search needs a compiled core: build the "
+                    "explorer from a CompiledCore or pass core=..."
+                )
+            kern = (
+                core if isinstance(core, StreamKernel)
+                else core.stream_kernel()
+            )
+            words, h, w = state.shape
+            halo, width = kern.halo, w
+            # The DFG fingerprint always wins on this path — a cache_tag
+            # must never alias two structurally different cores onto one
+            # cache key (stale hits); tags are for run_factory back ends
+            # that have no SPD core to hash.
+            fingerprint = measure.core_fingerprint(kern)
+            run_factory = kernel_run_factory(kern, state, regs, interpret)
+        else:
+            if grid_shape is None:
+                raise ValueError("run_factory needs grid_shape=(h, w)")
+            h, w = grid_shape
+            # Thread the concrete stripe geometry so this path gets the
+            # same VMEM legalization the codegen path does: the width is
+            # the grid's, the resident words come from the workload.
+            width, words = w, sweep.workload.words_in
+
+        strat = get_strategy(strategy)
+        runner = SearchRunner(
+            workload=sweep.workload,
+            grid_shape=(h, w),
+            run_factory=run_factory,
+            model=sweep.model,
+            scalar_kwargs=sweep.scalar_kwargs,
+            fingerprint=fingerprint,
+            halo=halo,
+            width=width,
+            words=words,
+            steps=steps,
+            interpret=interpret,
+            reps=reps,
+            warmup=warmup,
+            calibrate=calibrate,
+            cache=cache,
+            budget=budget,
+            timer=timer,
+            max_devices=max_devices,
+        )
+        executed = strat.search(sweep, runner)
+        return SearchResult(
+            strategy=strat.name,
+            executed=executed,
+            budget=runner.budget,
+            budget_spent=runner.budget_spent,
+            measurements=runner.measurements(),
+            skipped_devices=runner.skipped_devices,
+            skipped_illegal=runner.skipped_illegal,
+        )
 
     def execute_frontier(
         self,
@@ -347,335 +499,51 @@ class Explorer:
     ) -> list["ExecutedPoint"]:
         """Run the top-k *runnable* TPU frontier points and time them.
 
-        The one model→measurement loop in the repo
-        (docs/pipeline.md §execute, §measure): every frontier point —
-        single- or multi-device — is legalized through the shared
-        :func:`repro.core.legalize.resolve_run_plan` (per shard when the
-        point's device axis ``d > 1``, and always with the concrete
-        stripe geometry, so the VMEM clamp applies identically on the
-        codegen and ``run_factory`` paths), executed, and timed with the
-        honest harness :func:`repro.core.measure.time_run` — ``warmup``
-        un-timed compile calls, ``reps`` measured calls each
-        individually ``block_until_ready``'d, median wall time.
-
-        With ``calibrate=True`` (the default) the platform is probed
-        through the same execution path
-        (:func:`repro.core.measure.calibrate_execution`, one anchor per
-        device-axis value encountered) and each point's ``rel_error`` is
-        reported against the *calibrated* prediction — the throughput of
-        the backend actually running (Pallas interpreter on CPU, chip on
-        TPU) — so the number is a model-fidelity signal. The raw
-        uncalibrated diff survives as ``rel_error_model``.
-
-        ``cache`` enables the persistent measurement cache
-        (:func:`repro.core.measure.resolve_cache` policies: ``True`` =
-        default path, a path, or a ``MeasurementCache``); repeated
-        sweeps then skip recompile+retime, with hits flagged on the
-        returned points. Keys include the core's DFG fingerprint; custom
-        ``run_factory`` back ends have no core to hash, so they must
-        pass ``cache_tag`` to identify the kernel (else caching is
-        skipped for them; on the codegen path the fingerprint always
-        wins and ``cache_tag`` is ignored).
-
-        Default path: ``core`` (or the compiled core this explorer was
-        built from) lowers to a :class:`~repro.core.codegen.StreamKernel`;
-        ``state`` is the stacked ``(P, H, W)`` grid and ``regs`` the
-        core's ``Append_Reg`` values. Points with ``d > 1`` run through
-        :class:`repro.core.distribute.ShardedStreamKernel` on a ``d``-ring
-        mesh (docs/pipeline.md §distribute); points needing more devices
-        than the platform has (``max_devices``, default
-        ``jax.device_count()``) are skipped, so the walk continues down
-        the frontier until ``k`` points have actually executed.
-
-        Custom back ends (e.g. the hand-written LBM kernel behind the
-        deprecated module-level :func:`execute_frontier`) plug in via
-        ``run_factory(nsteps, m, block_h, d) -> nullary-callable | None``
-        plus the concrete ``grid_shape=(h, w)``; returning ``None`` skips
-        the point.
+        The original explorer behavior, kept as a thin facade over
+        :meth:`search` with
+        ``strategy=ExhaustiveSearch(k=k, frontier_only=True)``
+        (docs/pipeline.md §execute, §search): walk the Pareto frontier
+        best-first until ``k`` points have actually executed, skipping
+        points the platform has too few devices for. All measurement
+        semantics — legalization, honest timing, calibration, the
+        persistent cache, plan dedupe — are the runner's; see
+        :meth:`search` for them.
         """
-        import jax
-
-        from . import measure
-        from .legalize import resolve_run_plan
-
-        if sweep.target != "tpu":
-            raise ValueError(
-                "execute_frontier needs a TPU sweep (the FPGA target is a "
-                "model only; there is no Stratix V attached)"
-            )
-        halo = sweep.workload.halo
-        fingerprint = cache_tag
-        if run_factory is None:
-            from .codegen import StreamKernel
-
-            core = core if core is not None else self.core
-            if core is None:
-                raise ValueError(
-                    "Explorer.execute_frontier needs a compiled core: build "
-                    "the explorer from a CompiledCore or pass core=..."
-                )
-            kern = (
-                core if isinstance(core, StreamKernel)
-                else core.stream_kernel()
-            )
-            words, h, w = state.shape
-            halo, width = kern.halo, w
-            # The DFG fingerprint always wins on this path — a cache_tag
-            # must never alias two structurally different cores onto one
-            # cache key (stale hits); tags are for run_factory back ends
-            # that have no SPD core to hash.
-            fingerprint = measure.core_fingerprint(kern)
-
-            def run_factory(nsteps: int, m: int, block_h: int, d: int):
-                if d == 1:
-                    return lambda: kern.run_blocked(
-                        state, regs, steps=nsteps, m=m, block_h=block_h,
-                        interpret=interpret,
-                    )
-                runner = kern.sharded(d)  # cached per d on the kernel
-                return lambda: runner.run_blocked(
-                    state, regs, steps=nsteps, m=m, block_h=block_h,
-                    interpret=interpret,
-                )
-        else:
-            if grid_shape is None:
-                raise ValueError("run_factory needs grid_shape=(h, w)")
-            h, w = grid_shape
-            # Thread the concrete stripe geometry so this path gets the
-            # same VMEM legalization the codegen path does: the width is
-            # the grid's, the resident words come from the workload.
-            width, words = w, sweep.workload.words_in
-        if max_devices is None:
-            max_devices = jax.device_count()
-
-        mcache = measure.resolve_cache(cache)
-        if mcache is not None and fingerprint is None:
-            import warnings
-
-            warnings.warn(
-                "execute_frontier: measurement cache disabled — a custom "
-                "run_factory has no core fingerprint; pass cache_tag= to "
-                "identify the kernel",
-                RuntimeWarning,
-                stacklevel=2,
-            )
-            mcache = None
-        backend = measure.backend_descriptor()
-
-        cal_models: dict[int, object] = {}
-        cal_mem: list[float] = []  # bandwidth probe, shared across anchors
-
-        def _calibrated_model(d: int, fallback_plan: tuple[int, int]):
-            """Calibrated TPUModel for device count d (one probe per d).
-
-            When none of the default probe anchors has a legal plan on
-            this grid (e.g. a VMEM-tight width), the point's own
-            legalized ``(block_h, m)`` — which just legalized, so it
-            always works — becomes the anchor.
-            """
-            model = cal_models.get(d)
-            if model is None:
-                kw = dict(
-                    workload=sweep.workload,
-                    grid_shape=(h, w),
-                    halo=halo,
-                    width=width,
-                    words=words,
-                    d_values=(d,),
-                    interpret=interpret,
-                    reps=reps,
-                    warmup=warmup,
-                    cache=mcache,
-                    fingerprint=fingerprint,
-                    mem_gbs=cal_mem[0] if cal_mem else None,
-                )
-                try:
-                    cal = measure.calibrate_execution(run_factory, **kw)
-                except ValueError:
-                    kw["probe_plans"] = (fallback_plan,)
-                    cal = measure.calibrate_execution(run_factory, **kw)
-                if not cal_mem:
-                    cal_mem.append(cal.mem_gbs)
-                model = cal_models[d] = cal.model(d=d)
-            return model
-
-        flops_per_elem = sweep.workload.flops_per_elem
-        out: list[ExecutedPoint] = []
-        starved = 0
-        for pt in sweep.frontier():
-            if len(out) >= k:
-                break
-            d = max(1, int(pt.n))
-            if d > max_devices:
-                starved += 1  # not enough devices for this point's shards
-                continue
-            block_h, m, nsteps = resolve_run_plan(
-                h, pt, steps, halo=halo, width=width, words=words, d=d,
-            )
-            run = run_factory(nsteps, m, block_h, d)
-            if run is None:
-                continue  # this back end cannot execute the point
-
-            key = None
-            if mcache is not None:
-                key = measure.MeasurementCache.make_key(
-                    fingerprint, (h, w), (block_h, m, nsteps, d),
-                    backend, interpret, reps, warmup,
-                )
-            wall, cached = measure.measured_run(
-                run, key=key, cache=mcache, reps=reps, warmup=warmup,
-            )
-
-            sites = h * w * nsteps
-            mlups = sites / wall / 1e6
-            measured = sites * flops_per_elem / wall / 1e9
-            predicted = pt.sustained_gflops
-            calibrated = None
-            if calibrate:
-                # Predict the geometry actually run (legalized plan, not
-                # the raw lattice pick) under the measured constants.
-                calibrated = _calibrated_model(d, (block_h, m)).evaluate(
-                    sweep.workload, block_h, m, d=d,
-                ).sustained_gflops
-            headline = calibrated if calibrated is not None else predicted
-            out.append(
-                ExecutedPoint(
-                    point=pt,
-                    block_h=block_h,
-                    m=m,
-                    d=d,
-                    steps=nsteps,
-                    wall_s=wall,
-                    measured_mlups=mlups,
-                    measured_gflops=measured,
-                    predicted_gflops=predicted,
-                    rel_error=(
-                        (headline - measured) / headline if headline
-                        else 0.0
-                    ),
-                    interpret=interpret,
-                    calibrated_gflops=calibrated,
-                    rel_error_model=(
-                        (predicted - measured) / predicted if predicted
-                        else 0.0
-                    ),
-                    cached=cached,
-                    reps=reps,
-                )
-            )
-        if starved and len(out) < k:
-            import warnings
-
-            warnings.warn(
-                f"execute_frontier skipped {starved} frontier point(s) "
-                f"needing more than {max_devices} device(s) and executed "
-                f"only {len(out)} of the requested {k}. Sweep with "
-                f"d_values capped at jax.device_count() (off-TPU: "
-                "XLA_FLAGS=--xla_force_host_platform_device_count=N) to "
-                "time multi-device points.",
-                RuntimeWarning,
-                stacklevel=2,
-            )
-        return out
-
-
-# --------------------------------------------------------------------------
-# Executed frontier points (TPU target only: the kernel we actually ship)
-# --------------------------------------------------------------------------
-
-
-@dataclass
-class ExecutedPoint:
-    """One frontier point run through the real Pallas kernel."""
-
-    point: DesignPoint
-    block_h: int  # block actually used (clamped to divide the shard height)
-    m: int
-    d: int  # device axis: shards the grid ran across (1 = single device)
-    steps: int
-    wall_s: float  # median-of-reps wall time (repro.core.measure.time_run)
-    measured_mlups: float
-    measured_gflops: float
-    predicted_gflops: float  # uncalibrated model (TPU-v5e roofline constants)
-    rel_error: float  # (prediction - measured) / prediction, calibrated
-    #                   prediction when calibration ran, raw model otherwise
-    interpret: bool
-    # Prediction under measured platform constants (docs/pipeline.md
-    # §measure); None when execute_frontier ran with calibrate=False.
-    calibrated_gflops: float | None = None
-    rel_error_model: float = 0.0  # always vs the uncalibrated model
-    cached: bool = False  # wall time came from the measurement cache
-    reps: int = 1
-
-    def as_dict(self) -> dict:
-        """JSON-ready record — the one serialization shared by the CLI's
-        ``--json`` report and ``benchmarks/dse_sweep.py``'s
-        ``BENCH_dse.json`` (one schema, extended in one place)."""
-        return {
-            "block_h": int(self.block_h),
-            "m": int(self.m),
-            "d": int(self.d),
-            "steps": int(self.steps),
-            "wall_s": float(self.wall_s),
-            "measured_mlups": float(self.measured_mlups),
-            "measured_gflops": float(self.measured_gflops),
-            "predicted_gflops": float(self.predicted_gflops),
-            "calibrated_gflops": (
-                None if self.calibrated_gflops is None
-                else float(self.calibrated_gflops)
-            ),
-            "rel_error": float(self.rel_error),
-            "rel_error_model": float(self.rel_error_model),
-            "cached": bool(self.cached),
-            "reps": int(self.reps),
-            "interpret": bool(self.interpret),
-        }
-
-
-def execute_frontier(
-    sweep: Sweep,
-    f,
-    attr,
-    one_tau: float,
-    u_lid: float = 0.0,
-    k: int = 3,
-    steps: int | None = None,
-    interpret: bool = True,
-    reps: int = 3,
-) -> list[ExecutedPoint]:
-    """Deprecated: run TPU frontier points through ``lbm_stream``.
-
-    Thin wrapper kept for the hand-written-kernel entry; the single
-    timing/legalization path is :meth:`Explorer.execute_frontier`, which
-    this delegates to via ``run_factory``. The hand-written kernel is
-    single-device, so ``d > 1`` frontier points are skipped here — run
-    the generated uLBM kernel through the Explorer path to time those
-    (docs/pipeline.md §distribute).
-    """
-    import warnings
-
-    warnings.warn(
-        "repro.core.explorer.execute_frontier is deprecated; use "
-        "Explorer.execute_frontier (the codegen'd-kernel path, which also "
-        "times multi-device points)",
-        DeprecationWarning,
-        stacklevel=2,
-    )
-    from repro.kernels.lbm_stream.ops import lbm_run_blocked
-
-    def run_factory(nsteps: int, m: int, block_h: int, d: int):
-        if d != 1:
-            return None  # the hand-written kernel has no sharded form
-        return lambda: lbm_run_blocked(
-            f, attr, one_tau, u_lid,
-            steps=nsteps, m=m, block_h=block_h, interpret=interpret,
+        result = self.search(
+            sweep, state, regs,
+            strategy=ExhaustiveSearch(k=k, frontier_only=True),
+            core=core, steps=steps, interpret=interpret, reps=reps,
+            warmup=warmup, calibrate=calibrate, cache=cache,
+            cache_tag=cache_tag, run_factory=run_factory,
+            grid_shape=grid_shape, max_devices=max_devices,
         )
+        skipped = result.skipped_devices + result.skipped_illegal
+        if skipped and len(result.executed) < k:
+            import warnings
 
-    return Explorer(sweep.workload).execute_frontier(
-        sweep, k=k, steps=steps, interpret=interpret, reps=reps,
-        run_factory=run_factory, grid_shape=(f.shape[1], f.shape[2]),
-        cache_tag="lbm_stream",
-    )
+            reasons = []
+            if result.skipped_devices:
+                reasons.append(
+                    f"{result.skipped_devices} needing more devices than "
+                    "the platform has (sweep with d_values capped at "
+                    "jax.device_count(); off-TPU: XLA_FLAGS="
+                    "--xla_force_host_platform_device_count=N)"
+                )
+            if result.skipped_illegal:
+                reasons.append(
+                    f"{result.skipped_illegal} with no legal run plan on "
+                    "this grid (VMEM/halo constraints — see "
+                    "repro.core.legalize)"
+                )
+            warnings.warn(
+                f"execute_frontier skipped {skipped} frontier point(s) — "
+                + "; ".join(reasons)
+                + f" — and executed only {len(result.executed)} of the "
+                f"requested {k}.",
+                RuntimeWarning,
+                stacklevel=2,
+            )
+        return result.executed
 
 
 def render_executed(points: Sequence[ExecutedPoint]) -> str:
@@ -684,7 +552,8 @@ def render_executed(points: Sequence[ExecutedPoint]) -> str:
     ``calib GF/s`` is the prediction under measured platform constants
     (``-`` when calibration was off); ``rel err`` diffs against it when
     present (docs/pipeline.md §measure). ``src`` is ``cache`` when the
-    wall time came from the measurement cache.
+    wall time came from the measurement cache (or this search already
+    timed the same plan).
     """
     head = (
         "| block_h | m | d | steps | model GF/s | calib GF/s | measured GF/s "

@@ -65,6 +65,40 @@ def shard_height(h: int, d: int) -> int:
     return h // d
 
 
+def legal_block_values(h: int, m: int, *, halo: int = 1,
+                       width: int = 0, words: int = 0,
+                       vmem_bytes: int = VMEM_BYTES,
+                       d: int = 1) -> tuple[int, ...]:
+    """Every legal ``block_h`` for ``m`` fused steps on an ``h``-row grid.
+
+    The ascending chain of shard-height divisors that can source the
+    ``m·halo`` stencil halo and (when the stripe geometry is supplied)
+    fit the shared VMEM budget — i.e. exactly the values
+    :func:`blocking_plan` chooses among. Search strategies
+    (``repro.core.search``, docs/pipeline.md §search) step block_h
+    through this chain directly, which is what makes the block height a
+    first-class searched dimension rather than a legalization byproduct;
+    an empty tuple means no block is legal for this ``m`` (the
+    neighborhood move is simply not available).
+    """
+    if h < 1:
+        raise ValueError(f"grid height must be positive, got {h}")
+    local_h = shard_height(h, d)
+    halo = max(0, int(halo))
+    m = max(1, min(int(m), local_h))
+    floor = max(1, m * halo)
+    legal = [
+        v for v in range(1, local_h + 1)
+        if local_h % v == 0 and v >= floor
+    ]
+    if width and words:
+        legal = [
+            v for v in legal
+            if stripe_vmem_bytes(v, m, width, words, halo) <= vmem_bytes
+        ]
+    return tuple(legal)
+
+
 def blocking_plan(h: int, block_h: int, m: int, *, halo: int = 1,
                   width: int = 0, words: int = 0,
                   vmem_bytes: int = VMEM_BYTES, d: int = 1) -> tuple[int, int]:
@@ -152,6 +186,7 @@ __all__ = [
     "VMEM_BYTES",
     "VMEM_DOUBLE_BUFFER",
     "blocking_plan",
+    "legal_block_values",
     "resolve_run_plan",
     "shard_height",
     "stripe_vmem_bytes",

@@ -1,0 +1,104 @@
+"""Pluggable, budgeted design-space search (docs/pipeline.md §search).
+
+The subsystem the explorer facade (``Explorer.search``) drives: a
+:class:`~repro.core.search.strategies.SearchStrategy` decides which
+(n, m, d, block_h) candidates to spend measurements on, and the
+:class:`~repro.core.search.runner.SearchRunner` is the single
+legalize→run→time→calibrate engine every strategy shares — one plan
+dedupe table, one calibration anchor set, one measurement cache, one
+hard budget. :class:`SearchResult` is what a search returns: the
+executed points plus the accounting (strategy name, budget spent,
+per-plan measurement counts) that ``repro-explore --json`` and
+``BENCH_dse.json`` record.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+from .runner import (
+    BudgetExhausted,
+    ExecutedPoint,
+    RunPlan,
+    SearchRunner,
+    kernel_run_factory,
+)
+from .strategies import (
+    STRATEGIES,
+    ExhaustiveSearch,
+    LocalRefine,
+    SearchStrategy,
+    SuccessiveHalving,
+    get_strategy,
+)
+
+__all__ = [
+    "BudgetExhausted",
+    "ExecutedPoint",
+    "ExhaustiveSearch",
+    "LocalRefine",
+    "RunPlan",
+    "STRATEGIES",
+    "SearchResult",
+    "SearchRunner",
+    "SearchStrategy",
+    "SuccessiveHalving",
+    "get_strategy",
+    "kernel_run_factory",
+]
+
+
+@dataclass
+class SearchResult:
+    """One search invocation: executed points + budget accounting.
+
+    ``executed`` is in measurement order (what the strategy did);
+    ``best`` ranks by *measured* GFLOPS — the search's answer.
+    ``budget_spent`` counts live timings only: cache and in-run dedupe
+    hits are free, so a repeated search reports 0 spent.
+    ``measurements`` is the per-candidate ledger — one record per
+    concrete plan timed live, with its count (successive halving times
+    a surviving plan once per rung, at increasing reps).
+    """
+
+    strategy: str
+    executed: list[ExecutedPoint] = field(default_factory=list)
+    budget: int | None = None
+    budget_spent: int = 0
+    measurements: list[dict] = field(default_factory=list)
+    skipped_devices: int = 0
+    skipped_illegal: int = 0
+
+    @property
+    def best(self) -> ExecutedPoint | None:
+        """The measured-best *finalist* (None when nothing ran).
+
+        Only measurements at the highest rep count present compete:
+        under a rung schedule (successive halving) those are the
+        full-rep finals, so neither a plan's own lucky 1-rep screening
+        number nor an eliminated candidate's inflated screening wall
+        can outrank an honest final. For single-rep-level strategies
+        (exhaustive, refine) this is simply the measured argmax.
+        """
+        if not self.executed:
+            return None
+        max_reps = max(e.reps for e in self.executed)
+        finalists = [e for e in self.executed if e.reps == max_reps]
+        return max(finalists, key=lambda e: e.measured_gflops)
+
+    def __len__(self) -> int:
+        return len(self.executed)
+
+    def as_dict(self) -> dict:
+        """JSON-ready record (the CLI ``--json`` / BENCH schema)."""
+        best = self.best
+        return {
+            "strategy": self.strategy,
+            "budget": None if self.budget is None else int(self.budget),
+            "budget_spent": int(self.budget_spent),
+            "measurements": list(self.measurements),
+            "skipped_devices": int(self.skipped_devices),
+            "skipped_illegal": int(self.skipped_illegal),
+            "best": None if best is None else best.as_dict(),
+            "executed": [e.as_dict() for e in self.executed],
+        }

@@ -1,0 +1,454 @@
+"""The one model→measurement engine behind every search strategy.
+
+:class:`SearchRunner` is the plan-evaluation loop that used to live
+inside ``Explorer.execute_frontier``, factored out so that *any*
+:class:`~repro.core.search.strategies.SearchStrategy` — exhaustive
+frontier walk, local refinement, successive halving — executes through
+the identical legalize→run→time path (docs/pipeline.md §search,
+§execute, §measure). One call to :meth:`SearchRunner.measure` takes a
+model :class:`~repro.core.dse.DesignPoint` and
+
+1. **legalizes** it through the shared
+   :func:`repro.core.legalize.resolve_run_plan` (per shard when the
+   point's device axis ``d > 1``, always with the concrete stripe
+   geometry so the VMEM clamp applies on every back end);
+2. **dedupes** the concrete plan: distinct lattice points that legalize
+   to the same ``(block_h, m, steps, d)`` are timed **once per search**
+   — the second request is served from the in-run plan table even with
+   the persistent cache off;
+3. **times** it with the honest harness
+   (:func:`repro.core.measure.time_run` semantics: warm-up separated,
+   every rep synchronized, median wall) through the shared
+   :class:`~repro.core.measure.MeasurementCache` key space, charging the
+   **measurement budget** only for live timings — cache and dedupe hits
+   are free, which is what lets strategies compose across invocations;
+4. **predicts** the executed geometry under the backend calibration
+   (one probe per device-axis value, memoized per runner) so
+   ``rel_error`` stays a model-fidelity signal.
+
+When a live timing would exceed the budget, :exc:`BudgetExhausted` is
+raised *before* the kernel runs — the budget is a hard cap on
+measurements performed, not a soft target — and strategies catch it to
+finalize with what they have. Calibration probes are platform overhead
+shared by all candidates (bounded by the probe-set size per device-axis
+value) and are not charged against the candidate budget; searches that
+must be exactly budget-bounded run with ``calibrate=False``.
+
+The timing primitive is injectable (``timer``): tests drive whole
+strategies with a deterministic fake timer that maps a
+:class:`RunPlan` to a synthetic wall time, so budget accounting and
+strategy decisions are asserted without host-timing noise.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable, Sequence
+
+from ..dse import DesignPoint, StreamWorkload
+from ..legalize import resolve_run_plan
+
+__all__ = [
+    "BudgetExhausted",
+    "ExecutedPoint",
+    "RunPlan",
+    "SearchRunner",
+    "kernel_run_factory",
+]
+
+
+class BudgetExhausted(RuntimeError):
+    """A live measurement was requested beyond the hard budget."""
+
+
+@dataclass(frozen=True)
+class RunPlan:
+    """One concrete, legalized execution: what a measurement times.
+
+    The identity the runner dedupes and budgets on — ``reps`` is part of
+    it because a low-rep screening pass and a full-rep final are
+    different measurements (successive halving relies on that).
+    """
+
+    block_h: int
+    m: int
+    steps: int
+    d: int
+    reps: int
+
+    def key(self) -> tuple:
+        return (self.block_h, self.m, self.steps, self.d, self.reps)
+
+    def as_dict(self) -> dict:
+        return {
+            "block_h": int(self.block_h),
+            "m": int(self.m),
+            "steps": int(self.steps),
+            "d": int(self.d),
+            "reps": int(self.reps),
+        }
+
+
+@dataclass
+class ExecutedPoint:
+    """One design point run through the real Pallas kernel."""
+
+    point: DesignPoint
+    block_h: int  # block actually used (clamped to divide the shard height)
+    m: int
+    d: int  # device axis: shards the grid ran across (1 = single device)
+    steps: int
+    wall_s: float  # median-of-reps wall time (repro.core.measure.time_run)
+    measured_mlups: float
+    measured_gflops: float
+    predicted_gflops: float  # uncalibrated model (TPU-v5e roofline constants)
+    rel_error: float  # (prediction - measured) / prediction, calibrated
+    #                   prediction when calibration ran, raw model otherwise
+    interpret: bool
+    # Prediction under measured platform constants (docs/pipeline.md
+    # §measure); None when the runner measured with calibrate=False.
+    calibrated_gflops: float | None = None
+    rel_error_model: float = 0.0  # always vs the uncalibrated model
+    cached: bool = False  # wall time came from the measurement cache (or
+    #                       this search already timed the same plan)
+    reps: int = 1
+
+    def as_dict(self) -> dict:
+        """JSON-ready record — the one serialization shared by the CLI's
+        ``--json`` report and ``benchmarks/dse_sweep.py``'s
+        ``BENCH_dse.json`` (one schema, extended in one place)."""
+        return {
+            "block_h": int(self.block_h),
+            "m": int(self.m),
+            "d": int(self.d),
+            "steps": int(self.steps),
+            "wall_s": float(self.wall_s),
+            "measured_mlups": float(self.measured_mlups),
+            "measured_gflops": float(self.measured_gflops),
+            "predicted_gflops": float(self.predicted_gflops),
+            "calibrated_gflops": (
+                None if self.calibrated_gflops is None
+                else float(self.calibrated_gflops)
+            ),
+            "rel_error": float(self.rel_error),
+            "rel_error_model": float(self.rel_error_model),
+            "cached": bool(self.cached),
+            "reps": int(self.reps),
+            "interpret": bool(self.interpret),
+        }
+
+
+def kernel_run_factory(kern, state, regs: Sequence, interpret: bool):
+    """The default back end: a codegen'd StreamKernel, sharded for d>1.
+
+    Returns the ``run_factory(nsteps, m, block_h, d)`` the runner calls;
+    ``d > 1`` plans go through ``kern.sharded(d)`` (cached per d on the
+    kernel, docs/pipeline.md §distribute).
+    """
+
+    def run_factory(nsteps: int, m: int, block_h: int, d: int):
+        if d == 1:
+            return lambda: kern.run_blocked(
+                state, regs, steps=nsteps, m=m, block_h=block_h,
+                interpret=interpret,
+            )
+        runner = kern.sharded(d)  # cached per d on the kernel
+        return lambda: runner.run_blocked(
+            state, regs, steps=nsteps, m=m, block_h=block_h,
+            interpret=interpret,
+        )
+
+    return run_factory
+
+
+class SearchRunner:
+    """Legalize → run → time → calibrate, with dedupe and a hard budget.
+
+    Built once per search invocation (``Explorer.search`` /
+    ``Explorer.execute_frontier``); strategies call :meth:`measure` per
+    candidate and :meth:`point` to materialize neighborhood coordinates
+    through the scalar model. All constructor arguments describe the
+    fixed context of one search: the workload/grid being measured, the
+    back end (``run_factory``), the measurement policy (reps/warmup/
+    interpret/calibrate/cache), and the budget.
+    """
+
+    def __init__(
+        self,
+        *,
+        workload: StreamWorkload,
+        grid_shape: tuple[int, int],
+        run_factory: Callable,
+        model=None,
+        scalar_kwargs: dict | None = None,
+        fingerprint: str | None = None,
+        halo: int | None = None,
+        width: int | None = None,
+        words: int | None = None,
+        steps: int | None = None,
+        interpret: bool = True,
+        reps: int = 3,
+        warmup: int = 1,
+        calibrate: bool = True,
+        cache=None,
+        budget: int | None = None,
+        timer: Callable | None = None,
+        max_devices: int | None = None,
+    ):
+        from .. import measure
+
+        self.workload = workload
+        self.h, self.w = int(grid_shape[0]), int(grid_shape[1])
+        self.run_factory = run_factory
+        self.model = model
+        self.scalar_kwargs = dict(scalar_kwargs or {})
+        self.fingerprint = fingerprint
+        self.halo = workload.halo if halo is None else int(halo)
+        self.width = self.w if width is None else int(width)
+        self.words = workload.words_in if words is None else int(words)
+        self.steps = steps
+        self.interpret = bool(interpret)
+        self.reps = int(reps)
+        self.warmup = int(warmup)
+        self.calibrate = bool(calibrate)
+        self.cache = measure.resolve_cache(cache)
+        if self.cache is not None and fingerprint is None:
+            import warnings
+
+            warnings.warn(
+                "SearchRunner: measurement cache disabled — this back end "
+                "has no core fingerprint; pass cache_tag= to identify the "
+                "kernel",
+                RuntimeWarning,
+                stacklevel=3,
+            )
+            self.cache = None
+        self.budget = None if budget is None else int(budget)
+        if self.budget is not None and self.budget < 1:
+            raise ValueError(f"budget must be >= 1, got {self.budget}")
+        self.timer = timer
+        if max_devices is None:
+            import jax
+
+            max_devices = jax.device_count()
+        self.max_devices = int(max_devices)
+        self.backend = measure.backend_descriptor()
+        # ---- per-search state ---------------------------------------------
+        self.budget_spent = 0  # live timings charged against the budget
+        self.skipped_devices = 0  # candidates needing more devices than we have
+        self.skipped_illegal = 0  # candidates with no legal run plan
+        self._walls: dict[tuple, float] = {}  # plan.key() -> wall_s (dedupe)
+        self._counts: dict[tuple, int] = {}  # plan.key() -> live timings
+        self._cal_models: dict[int, object] = {}
+        self._cal_mem: list[float] = []  # bandwidth probe, shared across d
+
+    # ---- model-side helpers ------------------------------------------------
+
+    def point(self, block_h: int, m: int, d: int = 1) -> DesignPoint | None:
+        """Materialize a lattice coordinate through the scalar model.
+
+        Strategies use this to price neighborhood moves (LocalRefine's
+        (block_h, m, d) steps) before spending budget on them. ``None``
+        when the runner was built without a model (custom back ends that
+        only replay frontier points).
+        """
+        if self.model is None:
+            return None
+        return self.model.evaluate(
+            self.workload, int(block_h), int(m), d=int(d),
+            **self.scalar_kwargs,
+        )
+
+    def plan_for(self, point, *, reps: int | None = None) -> RunPlan | None:
+        """The concrete legalized plan a point would execute as.
+
+        ``None`` when the point cannot run here (device-starved or no
+        legal plan) — used by strategies to dedupe candidate pools
+        before spending any budget.
+        """
+        d = max(1, int(point.n))
+        if d > self.max_devices:
+            return None
+        try:
+            block_h, m, nsteps = resolve_run_plan(
+                self.h, point, self.steps, halo=self.halo,
+                width=self.width, words=self.words, d=d,
+            )
+        except ValueError:
+            return None
+        return RunPlan(block_h, m, nsteps, d,
+                       self.reps if reps is None else int(reps))
+
+    # ---- accounting --------------------------------------------------------
+
+    def remaining(self) -> float:
+        """Live measurements left under the budget (inf when unbudgeted)."""
+        if self.budget is None:
+            return float("inf")
+        return max(0, self.budget - self.budget_spent)
+
+    def measurements(self) -> list[dict]:
+        """Per-candidate measurement counts: one record per concrete
+        plan this search timed live (the ``--json`` / BENCH schema)."""
+        return [
+            {**RunPlan(*key).as_dict(), "count": count}
+            for key, count in sorted(self._counts.items())
+        ]
+
+    # ---- the engine --------------------------------------------------------
+
+    def measure(
+        self, point, *, reps: int | None = None
+    ) -> ExecutedPoint | None:
+        """Legalize, execute and time one design point.
+
+        Returns ``None`` when the point cannot run on this platform
+        (more shards than devices, no legal plan, or a back end that
+        declines it); raises :exc:`BudgetExhausted` when a live timing
+        would exceed the budget. Identical plans — across lattice
+        points, strategies, or (via the persistent cache) processes —
+        are timed once.
+        """
+        from .. import measure
+
+        d = max(1, int(point.n))
+        if d > self.max_devices:
+            self.skipped_devices += 1
+            return None
+        reps = self.reps if reps is None else int(reps)
+        try:
+            block_h, m, nsteps = resolve_run_plan(
+                self.h, point, self.steps, halo=self.halo,
+                width=self.width, words=self.words, d=d,
+            )
+        except ValueError:
+            self.skipped_illegal += 1
+            return None
+        plan = RunPlan(block_h, m, nsteps, d, reps)
+
+        cached = True
+        wall = self._walls.get(plan.key())  # in-run dedupe, cache-independent
+        if wall is None:
+            run = self.run_factory(nsteps, m, block_h, d)
+            if run is None:
+                return None  # this back end cannot execute the point
+            key = None
+            if self.cache is not None:
+                # An injected timer produces synthetic walls: they live
+                # in their own key namespace so an honest run can never
+                # be served a fabricated timing as a cache hit (and
+                # vice versa).
+                fp = (
+                    self.fingerprint if self.timer is None
+                    else f"injected-timer:{self.fingerprint}"
+                )
+                key = measure.MeasurementCache.make_key(
+                    fp, (self.h, self.w),
+                    (block_h, m, nsteps, d),
+                    self.backend, self.interpret, reps, self.warmup,
+                )
+                rec = self.cache.get(key)
+                if rec is not None:
+                    wall = float(rec["wall_s"])
+            if wall is None:
+                if self.budget is not None and self.budget_spent >= self.budget:
+                    raise BudgetExhausted(
+                        f"measurement budget of {self.budget} exhausted "
+                        f"before timing plan {plan.as_dict()}"
+                    )
+                wall, record = self._time(plan, run)
+                self.budget_spent += 1
+                self._counts[plan.key()] = self._counts.get(plan.key(), 0) + 1
+                cached = False
+                if self.cache is not None and key is not None:
+                    self.cache.put(key, record)
+            self._walls[plan.key()] = wall
+
+        sites = self.h * self.w * nsteps
+        flops_per_elem = self.workload.flops_per_elem
+        mlups = sites / wall / 1e6
+        measured = sites * flops_per_elem / wall / 1e9
+        predicted = point.sustained_gflops
+        calibrated = None
+        if self.calibrate:
+            # Predict the geometry actually run (legalized plan, not the
+            # raw lattice pick) under the measured platform constants.
+            calibrated = self._calibrated_model(d, (block_h, m)).evaluate(
+                self.workload, block_h, m, d=d,
+            ).sustained_gflops
+        headline = calibrated if calibrated is not None else predicted
+        return ExecutedPoint(
+            point=point,
+            block_h=block_h,
+            m=m,
+            d=d,
+            steps=nsteps,
+            wall_s=wall,
+            measured_mlups=mlups,
+            measured_gflops=measured,
+            predicted_gflops=predicted,
+            rel_error=(headline - measured) / headline if headline else 0.0,
+            interpret=self.interpret,
+            calibrated_gflops=calibrated,
+            rel_error_model=(
+                (predicted - measured) / predicted if predicted else 0.0
+            ),
+            cached=cached,
+            reps=reps,
+        )
+
+    # ---- internals ---------------------------------------------------------
+
+    def _time(self, plan: RunPlan, run: Callable) -> tuple[float, dict]:
+        """One live timing: the injected timer or the honest harness."""
+        from .. import measure
+
+        if self.timer is not None:
+            wall = float(self.timer(plan, run, plan.reps, self.warmup))
+            return wall, {
+                "wall_s": wall, "reps": plan.reps, "warmup": self.warmup,
+            }
+        timing = measure.time_run(run, reps=plan.reps, warmup=self.warmup)
+        return timing.wall_s, {
+            "wall_s": timing.wall_s,
+            "times_s": list(timing.times_s),
+            "reps": timing.reps,
+            "warmup": timing.warmup,
+            "overhead_s": timing.overhead_s,
+        }
+
+    def _calibrated_model(self, d: int, fallback_plan: tuple[int, int]):
+        """Calibrated TPUModel for device count d (one probe per d).
+
+        When none of the default probe anchors has a legal plan on this
+        grid (e.g. a VMEM-tight width), the point's own legalized
+        ``(block_h, m)`` — which just legalized, so it always works —
+        becomes the anchor.
+        """
+        from .. import measure
+
+        model = self._cal_models.get(d)
+        if model is None:
+            kw = dict(
+                workload=self.workload,
+                grid_shape=(self.h, self.w),
+                halo=self.halo,
+                width=self.width,
+                words=self.words,
+                d_values=(d,),
+                interpret=self.interpret,
+                reps=self.reps,
+                warmup=self.warmup,
+                cache=self.cache,
+                fingerprint=self.fingerprint,
+                mem_gbs=self._cal_mem[0] if self._cal_mem else None,
+            )
+            try:
+                cal = measure.calibrate_execution(self.run_factory, **kw)
+            except ValueError:
+                kw["probe_plans"] = (fallback_plan,)
+                cal = measure.calibrate_execution(self.run_factory, **kw)
+            if not self._cal_mem:
+                self._cal_mem.append(cal.mem_gbs)
+            model = self._cal_models[d] = cal.model(d=d)
+        return model

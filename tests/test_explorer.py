@@ -15,7 +15,6 @@ from repro.core.explorer import (
     DEFAULT_MAXIMIZE,
     DEFAULT_OBJECTIVES,
     Explorer,
-    execute_frontier,
     pareto_mask,
 )
 from repro.kernels.lbm_stream.ops import blocking_plan
@@ -146,7 +145,7 @@ def test_tpu_batched_matches_scalar_point_for_point(explorer):
         bh = int(sweep.data["block_rows"][i])
         m = int(sweep.data["m"][i])
         chips = int(sweep.data["n"][i])
-        pt = model.evaluate(LBM_W, bh, m, n_chips=chips)
+        pt = model.evaluate(LBM_W, bh, m, d=chips)
         assert pt.feasible == bool(sweep.data["feasible"][i])
         for key, want in [
             ("peak_gflops", pt.peak_gflops),
@@ -240,13 +239,17 @@ def test_tpu_frontier_prefers_temporal_blocking(explorer):
     assert "compute-bound" in best.limits
 
 
-def test_tpu_sweep_chip_values_alias_warns(explorer):
-    """The deprecated chip_values spelling still works, with a warning."""
-    with pytest.warns(DeprecationWarning, match="d_values"):
-        sweep = explorer.sweep_tpu(
-            bh_values=(8,), m_values=(1,), chip_values=(1, 2)
-        )
-    assert set(np.unique(sweep.data["d"])) == {1, 2}
+def test_deprecated_spellings_are_gone(explorer):
+    """The PR-3-era deprecated spellings (chip_values on the sweep,
+    n_chips on the model, the module-level execute_frontier wrapper)
+    have completed their deprecation cycle and are removed."""
+    with pytest.raises(TypeError, match="chip_values"):
+        explorer.sweep_tpu(bh_values=(8,), m_values=(1,), chip_values=(1, 2))
+    with pytest.raises(TypeError, match="n_chips"):
+        TPUModel().evaluate(LBM_W, 8, 1, n_chips=2)
+    import repro.core.explorer as exp_mod
+
+    assert not hasattr(exp_mod, "execute_frontier")
 
 
 def test_tpu_default_sweep_enumerates_device_axis(explorer):
@@ -374,17 +377,33 @@ def test_run_factory_path_gets_vmem_stripe_check(explorer):
     assert seen[-1] == (r.block_h, r.m, r.steps, 1)
 
 
-def test_execute_frontier_closes_the_loop():
+def test_execute_frontier_closes_the_loop_hand_written_kernel():
+    """The hand-written lbm_stream kernel plugs into the one timing path
+    via run_factory (the former module-level wrapper's job, now a
+    caller-side four-liner). Single-device only: d > 1 plans return
+    None and are skipped."""
     from repro.apps import lbm
+    from repro.kernels.lbm_stream.ops import lbm_run_blocked
 
     sim = lbm.LBMSimulation(lbm.LBMProblem(16, 32, mode="wrap"))
     sweep = sim.explorer().sweep_tpu(bh_values=(8, 16), m_values=(1, 2))
     f, attr, _ = lbm.taylor_green_init(16, 32)
-    with pytest.warns(DeprecationWarning):  # thin wrapper, one timing path
-        runs = execute_frontier(sweep, f, attr, one_tau=1 / 0.8, k=2,
-                                interpret=True)
+
+    def run_factory(nsteps, m, block_h, d):
+        if d != 1:
+            return None  # the hand-written kernel has no sharded form
+        return lambda: lbm_run_blocked(
+            f, attr, 1 / 0.8, 0.0,
+            steps=nsteps, m=m, block_h=block_h, interpret=True,
+        )
+
+    runs = Explorer(sweep.workload).execute_frontier(
+        sweep, k=2, interpret=True, run_factory=run_factory,
+        grid_shape=(16, 32), cache_tag="lbm_stream",
+    )
     assert 1 <= len(runs) <= 2
     for r in runs:
+        assert r.d == 1
         assert 16 % r.block_h == 0 and r.m <= r.block_h
         assert r.wall_s > 0 and r.measured_mlups > 0
         assert np.isfinite(r.rel_error)
@@ -398,9 +417,8 @@ def test_execute_frontier_rejects_fpga_sweep(explorer):
 
     sweep = explorer.sweep_fpga()
     dummy = jnp.zeros((9, 8, 16), jnp.float32)
-    with pytest.warns(DeprecationWarning), \
-            pytest.raises(ValueError, match="TPU sweep"):
-        execute_frontier(sweep, dummy, dummy[0], 1.0)
+    with pytest.raises(ValueError, match="TPU sweep"):
+        explorer.execute_frontier(sweep, dummy, dummy[0])
 
 
 def test_lbm_run_for_point_matches_reference():
