@@ -20,8 +20,12 @@ driven end-to-end by ``repro.core.explorer``:
    point) — and the persistent measurement cache, whose hit/miss stats
    land in the JSON (a repeated benchmark run re-times nothing).
    An **autotune smoke** then runs the budgeted strategies (LocalRefine,
-   SuccessiveHalving) under a hard budget of ≤ 12 measurements each and
-   hard-fails if a strategy overspends.
+   SuccessiveHalving, and the surrogate TPESearch) under a hard budget
+   of ≤ 12 measurements each and hard-fails if a strategy overspends.
+   The TPE pass journals into a durable named study
+   (docs/pipeline.md §study) whose convergence/Pareto report is written
+   next to the JSON as ``BENCH_study.html`` / ``BENCH_study.txt`` —
+   the CI bench job uploads it as an artifact.
 3. LM mesh planner: (dp, tp, pp) ranking for a transformer arch — the
    paper's spatial/temporal trade lifted to the fleet (DESIGN.md §4).
 
@@ -198,16 +202,28 @@ def run(topk: int = 3, interpret: bool = True, reps: int = 3,
         f"\n## DSE sweep 2e: autotune smoke — measured-in-the-loop "
         f"search, hard budget {AUTOTUNE_BUDGET} measurements/strategy"
     )
+    from repro.core.search import Study, TPESearch
+
     exhaustive_best = max(e.measured_gflops for e in runs) if runs else 0.0
     autotune: dict = {"budget": AUTOTUNE_BUDGET}
-    for strat in ("refine", "halving"):
+    # The TPE pass journals into a durable named study: a re-run of the
+    # benchmark replays completed trials from it (and from the cache)
+    # instead of re-measuring (docs/pipeline.md §study).
+    study_name = "bench-dse"
+    specs = (
+        ("refine", "refine", {}),
+        ("halving", "halving", {}),
+        ("tpe", TPESearch(seed=0), {"study": study_name}),
+    )
+    for label, strat, extra in specs:
         sres = mex.search(
             msweep, mstate, mregs, strategy=strat, budget=AUTOTUNE_BUDGET,
             interpret=interpret, reps=reps, calibrate=True, cache=cache,
+            **extra,
         )
         if sres.budget_spent > AUTOTUNE_BUDGET:
             raise RuntimeError(
-                f"autotune budget regression: strategy {strat!r} spent "
+                f"autotune budget regression: strategy {label!r} spent "
                 f"{sres.budget_spent} > {AUTOTUNE_BUDGET} measurements"
             )
         b = sres.best
@@ -216,22 +232,33 @@ def run(topk: int = 3, interpret: bool = True, reps: int = 3,
             if b is not None and exhaustive_best else 0.0
         )
         out.append(
-            f"  {strat}: best "
+            f"  {label}: best "
             + (f"(block_h={b.block_h}, m={b.m}, d={b.d}) "
                f"{b.measured_gflops:.4g} GF/s measured"
                if b is not None else "n/a")
             + f" ({ratio:.2f}x the exhaustive frontier best), "
             f"{sres.budget_spent}/{AUTOTUNE_BUDGET} budget spent, "
             f"{len(sres.executed)} point(s) measured"
+            + (f", {sres.replayed} replayed from study {sres.study!r}"
+               if sres.study else "")
         )
-        autotune[strat] = {
-            "strategy": sres.strategy,
-            "budget": sres.budget,
-            "budget_spent": sres.budget_spent,
-            "vs_exhaustive_best": float(ratio),
-            "best": None if b is None else b.as_dict(),
-            "measurements": sres.measurements,
+        # One schema for every search section: SearchResult.as_dict
+        # (SEARCH_RESULT_FIELDS) — the derived ratio rides along.
+        autotune[label] = {
+            **sres.as_dict(), "vs_exhaustive_best": float(ratio),
         }
+
+    # Render the study's convergence/Pareto report next to the JSON —
+    # the artifact the CI bench job uploads.
+    study = Study.resume(study_name)
+    study_report = study.report(
+        out_dir=os.path.dirname(BENCH_PATH), basename="BENCH_study"
+    )
+    out.append(
+        f"\n## DSE sweep 2f: study report — "
+        + study.report_text().splitlines()[0]
+    )
+    out.append(f"[wrote {study_report['text']} / {study_report['html']}]")
 
     out.append("\n## DSE sweep 3: LM mesh planner (granite-34b, 256 chips)")
     g = get_arch("granite-34b")
@@ -272,14 +299,17 @@ def run(topk: int = 3, interpret: bool = True, reps: int = 3,
                          "block_h": int(b.detail["block_rows"]),
                          "sustained_gflops": float(b.sustained_gflops)},
                 "executed": [e.as_dict() for e in sr.executed],
-                "search": {
-                    "strategy": sr.strategy,
-                    "budget": sr.budget,
-                    "budget_spent": sr.budget_spent,
-                    "measurements": sr.measurements,
-                },
+                # The one search-result schema (SEARCH_RESULT_FIELDS):
+                # never a hand-picked subset that can drift from the CLI.
+                "search": sr.as_dict(),
             }
         bench["autotune"] = autotune
+        bench["study"] = {
+            "name": study_name,
+            "records": len(study.records),
+            "report_html": os.path.basename(study_report["html"]),
+            "report_text": os.path.basename(study_report["text"]),
+        }
         bench["grid"] = [MEASURE_H, MEASURE_W]
         bench["exec_d"] = [int(d) for d in exec_d]
         bench["interpret"] = bool(interpret)

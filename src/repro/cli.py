@@ -12,7 +12,14 @@ measurement budget is spent — ``exhaustive`` walks the Pareto frontier
 top-down (the default), ``refine`` hill-climbs the (block_h, m, d)
 neighborhood of the model's best points, ``halving`` races a wide
 model-ranked pool with cheap screening reps and full-rep finals —
-and ``--budget N`` caps live measurements hard. Single-device points
+``tpe`` learns where to measure next with a seeded Tree-structured
+Parzen Estimator (docs/pipeline.md §study) — and ``--budget N`` caps
+live measurements hard. ``--study NAME`` journals every trial into a
+durable study (``--study-dir``, default ``~/.cache/repro/studies``):
+re-running with the same name replays completed trials into the plan
+dedupe table, so an interrupted search resumes with zero
+re-measurement; ``--seed`` fixes the TPE sampler's RNG and ``--trials``
+bounds its total observations. Single-device points
 run the codegen'd kernel directly, ``d > 1`` points run sharded with
 halo exchange when the platform has the devices. ``--devices N`` caps
 the swept d axis, ``--json PATH`` dumps the machine-readable results
@@ -95,6 +102,21 @@ def explore_main(argv: list[str] | None = None) -> None:
     ap.add_argument("--no-cache", action="store_true",
                     help="skip the persistent measurement cache and "
                          "re-time every point")
+    ap.add_argument("--study", type=str, default=None, metavar="NAME",
+                    help="journal every trial into a durable named study "
+                         "(docs/pipeline.md §study); re-running with the "
+                         "same name resumes it, replaying completed "
+                         "trials with zero re-measurement")
+    ap.add_argument("--study-dir", type=str, default=None, metavar="PATH",
+                    help="directory holding study journals (default: "
+                         "$REPRO_STUDY_DIR or ~/.cache/repro/studies)")
+    ap.add_argument("--seed", type=int, default=0, metavar="N",
+                    help="RNG seed for --strategy tpe (a seeded search "
+                         "reproduces the identical trial sequence)")
+    ap.add_argument("--trials", type=int, default=None, metavar="N",
+                    help="cap on total tpe observations, replayed + "
+                         "measured (a resumed study whose replays cover "
+                         "N spends zero budget)")
     args = ap.parse_args(argv)
     d_values = device_axis_values(args.devices)
     report: dict = {"d_values": list(d_values)}
@@ -149,8 +171,15 @@ def explore_main(argv: list[str] | None = None) -> None:
         # the --budget cap (docs/pipeline.md §search).
         if args.strategy == "exhaustive":
             strategy = ExhaustiveSearch(k=args.topk, frontier_only=True)
+        elif args.strategy == "tpe":
+            from repro.core.search import TPESearch
+
+            strategy = TPESearch(seed=args.seed, max_trials=args.trials)
         else:
             strategy = args.strategy
+        # One named study can hold both app searches: trials are keyed
+        # by core fingerprint, so each search replays only its own.
+        study_kw = dict(study=args.study, study_dir=args.study_dir)
         print()
         print("=" * 72)
         print(f"3) Model -> measurement: --strategy {args.strategy} "
@@ -169,10 +198,13 @@ def explore_main(argv: list[str] | None = None) -> None:
             msweep, msim.stream_state(f0, attr), msim.stream_regs(),
             strategy=strategy, budget=args.budget, interpret=True,
             reps=args.reps, calibrate=args.calibrate, cache=mcache,
+            **study_kw,
         )
         print(render_executed(mres.executed))
         print(f"(strategy={mres.strategy}: {mres.budget_spent} live "
-              f"measurement(s), {len(mres.executed)} point(s) executed)")
+              f"measurement(s), {len(mres.executed)} point(s) executed"
+              + (f", {mres.replayed} replayed from study "
+                 f"{mres.study!r}" if mres.study else "") + ")")
         report["lbm"] = mres.as_dict()
 
         print()
@@ -188,10 +220,13 @@ def explore_main(argv: list[str] | None = None) -> None:
         dres = dex.search(dsweep, dsim.state(u0), (dsim.alpha,),
                           strategy=strategy, budget=args.budget,
                           interpret=True, reps=args.reps,
-                          calibrate=args.calibrate, cache=mcache)
+                          calibrate=args.calibrate, cache=mcache,
+                          **study_kw)
         print(render_executed(dres.executed))
         print(f"(strategy={dres.strategy}: {dres.budget_spent} live "
-              f"measurement(s), {len(dres.executed)} point(s) executed)")
+              f"measurement(s), {len(dres.executed)} point(s) executed"
+              + (f", {dres.replayed} replayed from study "
+                 f"{dres.study!r}" if dres.study else "") + ")")
         halo = dsim.kernel.summary
         print(f"(inferred stencil: {len(halo.offsets)} offsets, "
               f"halo = {halo.halo_y} row/step — no hand-written kernel)")
@@ -202,6 +237,9 @@ def explore_main(argv: list[str] | None = None) -> None:
             "strategy": args.strategy,
             "budget": args.budget,
             "cache": None if mcache is None else mcache.stats(),
+            "study": args.study,
+            "seed": args.seed,
+            "trials": args.trials,
         }
         if mcache is not None:
             s = mcache.stats()

@@ -346,6 +346,8 @@ class Explorer:
         grid_shape: tuple[int, int] | None = None,
         max_devices: int | None = None,
         timer=None,
+        study=None,
+        study_dir: str | None = None,
     ) -> SearchResult:
         """Search the TPU lattice with measurement in the loop.
 
@@ -406,6 +408,18 @@ class Explorer:
         ``None`` skips the point. ``timer`` injects the timing
         primitive (tests drive whole strategies with a deterministic
         fake).
+
+        ``study`` attaches a durable :class:`~repro.core.search.Study`
+        journal (docs/pipeline.md §study): a name (resumed/created under
+        ``study_dir`` via :meth:`Study.resume`) or an instance. Before
+        the strategy runs, the study's completed trials for this exact
+        measurement context (core fingerprint, grid, backend, interpret,
+        warmup) are replayed into the runner's plan-dedupe table — an
+        interrupted search resumed by name re-measures **zero** of them
+        — and every new measurement is journaled back, so the study only
+        grows. Back ends with no fingerprint (``run_factory`` without
+        ``cache_tag``) cannot be identified across processes; the study
+        is dropped with a warning for them.
         """
         from . import measure
 
@@ -467,6 +481,31 @@ class Explorer:
             timer=timer,
             max_devices=max_devices,
         )
+        replayed = 0
+        if study is not None:
+            from .search.study import Study
+
+            if isinstance(study, str):
+                study = Study.resume(study, study_dir)
+            if runner.study_fingerprint() is None:
+                import warnings
+
+                warnings.warn(
+                    "Explorer.search: study disabled — this back end has "
+                    "no core fingerprint, so its trials cannot be "
+                    "identified across processes; pass cache_tag= to "
+                    "identify the kernel",
+                    RuntimeWarning,
+                    stacklevel=2,
+                )
+                study = None
+            else:
+                replayed = study.replay_into(runner)
+                runner.study = study
+                runner.study_meta = {
+                    "strategy": strat.name,
+                    "seed": getattr(strat, "seed", None),
+                }
         executed = strat.search(sweep, runner)
         return SearchResult(
             strategy=strat.name,
@@ -476,6 +515,8 @@ class Explorer:
             measurements=runner.measurements(),
             skipped_devices=runner.skipped_devices,
             skipped_illegal=runner.skipped_illegal,
+            study=None if study is None else study.name,
+            replayed=replayed,
         )
 
     def execute_frontier(

@@ -163,6 +163,62 @@ def blocking_plan(h: int, block_h: int, m: int, *, halo: int = 1,
     return (max(under) if under else min(legal)), m
 
 
+def constraint_violation(h: int, block_h: int, m: int, *, halo: int = 1,
+                         width: int = 0, words: int = 0,
+                         vmem_bytes: int = VMEM_BYTES, d: int = 1) -> float:
+    """Continuous distance-to-feasibility of a (block_h, m, d) request.
+
+    Exactly ``0.0`` iff :func:`blocking_plan` would produce a legal plan
+    for the same arguments; positive otherwise, and **monotone in the
+    VMEM overshoot** — the deeper the smallest legal stripe overflows
+    the budget, the larger the distance. Surrogate search strategies
+    (docs/pipeline.md §study) use this as a penalty signal instead of
+    hard-rejecting infeasible candidates: a continuous violation gives
+    the sampler a gradient toward the feasible region, where a boolean
+    would leave it blind (the ``constraint_violation``-as-gradient trick
+    of Optuna-style DSE harnesses).
+
+    The three failure modes, by increasing distance-from-legal:
+
+    * **VMEM overflow** — every legal divisor's stripe exceeds the
+      budget: violation is the fractional overshoot of the *smallest*
+      legal stripe, ``(bytes - vmem_bytes) / vmem_bytes``;
+    * **unsourceable halo** — the per-step stencil reach exceeds the
+      shard height: ``1 +`` the fractional excess (strictly above every
+      VMEM violation of the same order);
+    * **unshardable grid** — ``h % d != 0`` has no closest legal plan
+      at all: ``1 +`` the fractional remainder.
+    """
+    if h < 1:
+        raise ValueError(f"grid height must be positive, got {h}")
+    d = int(d)
+    if d < 1:
+        raise ValueError(f"device axis must be >= 1, got d={d}")
+    if h % d:
+        return 1.0 + (h % d) / d
+    local_h = h // d
+    halo = max(0, int(halo))
+    m = max(1, min(int(m), local_h))
+    if halo > local_h:
+        # even one fused step cannot source its halo on this shard
+        return 1.0 + (halo - local_h) / local_h
+    if not (width and words):
+        return 0.0
+    # Mirror blocking_plan's m-shrink loop, then price the smallest
+    # legal stripe against the budget.
+    divisors = [v for v in range(1, local_h + 1) if local_h % v == 0]
+    floor = max(1, m * halo)
+    legal = [v for v in divisors if v >= floor]
+    while not legal and m > 1:
+        m -= 1
+        floor = max(1, m * halo)
+        legal = [v for v in divisors if v >= floor]
+    need = min(stripe_vmem_bytes(v, m, width, words, halo) for v in legal)
+    if need <= vmem_bytes:
+        return 0.0
+    return (need - vmem_bytes) / vmem_bytes
+
+
 def resolve_run_plan(h: int, point, steps: int | None = None, *,
                      halo: int = 1, width: int = 0,
                      words: int = 0, d: int = 1) -> tuple[int, int, int]:
@@ -186,6 +242,7 @@ __all__ = [
     "VMEM_BYTES",
     "VMEM_DOUBLE_BUFFER",
     "blocking_plan",
+    "constraint_violation",
     "legal_block_values",
     "resolve_run_plan",
     "shard_height",

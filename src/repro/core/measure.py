@@ -342,6 +342,16 @@ class MeasurementCache:
             self.hits += 1
         return rec
 
+    def peek(self, key: str) -> dict | None:
+        """Like :meth:`get` but without touching the hit/miss counters.
+
+        Surrogate search strategies (docs/pipeline.md §study) scan every
+        candidate's key to warm-start from prior measurements; those
+        scans are bookkeeping, not lookups, and must not distort the
+        stats the benchmarks report.
+        """
+        return self._data.get(key)
+
     def put(self, key: str, record: dict) -> None:
         self._data[key] = dict(record)
         self._flush()
@@ -375,20 +385,44 @@ class MeasurementCache:
         # for while concurrent runs merge instead of clobbering.
         directory = os.path.dirname(self.path) or "."
         os.makedirs(directory, exist_ok=True)
-        merged = self._load()  # re-merge concurrent writers, newest wins
-        merged.update(self._data)
-        self._data = merged
-        tmp = f"{self.path}.tmp.{os.getpid()}"
+        # Serialize the load→merge→replace against concurrent writers: two
+        # processes flushing between each other's load and replace would
+        # otherwise drop whichever record landed in the window. Study
+        # resume (docs/pipeline.md §study) leans on this contract, so it
+        # is a lock, not a race we tolerate. Best-effort: platforms or
+        # filesystems without flock fall back to the unlocked merge.
+        lock_fh = None
         try:
-            with open(tmp, "w", encoding="utf-8") as fh:
-                json.dump(merged, fh, indent=1, sort_keys=True)
-            os.replace(tmp, self.path)
-        except OSError:
-            # A read-only cache location must never fail the measurement.
+            import fcntl
+
+            lock_fh = open(f"{self.path}.lock", "w")
+            fcntl.flock(lock_fh, fcntl.LOCK_EX)
+        except (ImportError, OSError):
+            lock_fh = None
+        try:
+            merged = self._load()  # re-merge concurrent writers, newest wins
+            merged.update(self._data)
+            self._data = merged
+            tmp = f"{self.path}.tmp.{os.getpid()}"
             try:
-                os.unlink(tmp)
+                with open(tmp, "w", encoding="utf-8") as fh:
+                    json.dump(merged, fh, indent=1, sort_keys=True)
+                os.replace(tmp, self.path)
             except OSError:
-                pass
+                # A read-only cache location must never fail the measurement.
+                try:
+                    os.unlink(tmp)
+                except OSError:
+                    pass
+        finally:
+            if lock_fh is not None:
+                try:
+                    import fcntl
+
+                    fcntl.flock(lock_fh, fcntl.LOCK_UN)
+                except (ImportError, OSError):
+                    pass
+                lock_fh.close()
 
 
 def resolve_cache(policy) -> MeasurementCache | None:

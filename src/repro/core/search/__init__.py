@@ -9,7 +9,10 @@ dedupe table, one calibration anchor set, one measurement cache, one
 hard budget. :class:`SearchResult` is what a search returns: the
 executed points plus the accounting (strategy name, budget spent,
 per-plan measurement counts) that ``repro-explore --json`` and
-``BENCH_dse.json`` record.
+``BENCH_dse.json`` record. Durable, resumable searches layer on top:
+:class:`~repro.core.search.study.Study` journals every trial and
+:class:`~repro.core.search.surrogate.TPESearch` learns where to measure
+next from them (docs/pipeline.md §study).
 """
 
 from __future__ import annotations
@@ -17,6 +20,7 @@ from __future__ import annotations
 from dataclasses import dataclass, field
 
 from .runner import (
+    EXECUTED_POINT_FIELDS,
     BudgetExhausted,
     ExecutedPoint,
     RunPlan,
@@ -31,21 +35,45 @@ from .strategies import (
     SuccessiveHalving,
     get_strategy,
 )
+from .study import Study, default_study_dir
+from .surrogate import TPESearch
 
 __all__ = [
     "BudgetExhausted",
+    "EXECUTED_POINT_FIELDS",
     "ExecutedPoint",
     "ExhaustiveSearch",
     "LocalRefine",
     "RunPlan",
+    "SEARCH_RESULT_FIELDS",
     "STRATEGIES",
     "SearchResult",
     "SearchRunner",
     "SearchStrategy",
+    "Study",
     "SuccessiveHalving",
+    "TPESearch",
+    "default_study_dir",
     "get_strategy",
     "kernel_run_factory",
 ]
+
+
+#: The one search-result record schema: ``SearchResult.as_dict`` (the
+#: CLI ``--json`` report and every ``BENCH_dse.json`` search section)
+#: carries exactly these keys — asserted in ``tests/test_study.py``.
+SEARCH_RESULT_FIELDS = (
+    "strategy",
+    "budget",
+    "budget_spent",
+    "measurements",
+    "skipped_devices",
+    "skipped_illegal",
+    "study",
+    "replayed",
+    "best",
+    "executed",
+)
 
 
 @dataclass
@@ -68,6 +96,8 @@ class SearchResult:
     measurements: list[dict] = field(default_factory=list)
     skipped_devices: int = 0
     skipped_illegal: int = 0
+    study: str | None = None  # durable study this search journaled into
+    replayed: int = 0  # completed trials replayed from it (0 budget each)
 
     @property
     def best(self) -> ExecutedPoint | None:
@@ -90,7 +120,9 @@ class SearchResult:
         return len(self.executed)
 
     def as_dict(self) -> dict:
-        """JSON-ready record (the CLI ``--json`` / BENCH schema)."""
+        """JSON-ready record — the one serialization
+        (:data:`SEARCH_RESULT_FIELDS`) shared by the CLI ``--json``
+        report and every BENCH_dse.json search section."""
         best = self.best
         return {
             "strategy": self.strategy,
@@ -99,6 +131,8 @@ class SearchResult:
             "measurements": list(self.measurements),
             "skipped_devices": int(self.skipped_devices),
             "skipped_illegal": int(self.skipped_illegal),
+            "study": self.study,
+            "replayed": int(self.replayed),
             "best": None if best is None else best.as_dict(),
             "executed": [e.as_dict() for e in self.executed],
         }

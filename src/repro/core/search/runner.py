@@ -50,6 +50,7 @@ from ..legalize import resolve_run_plan
 
 __all__ = [
     "BudgetExhausted",
+    "EXECUTED_POINT_FIELDS",
     "ExecutedPoint",
     "RunPlan",
     "SearchRunner",
@@ -89,6 +90,30 @@ class RunPlan:
         }
 
 
+#: The one executed-point record schema. Single source of truth for
+#: every serialized form of a measurement: ``ExecutedPoint.as_dict``
+#: (the CLI ``--json`` report and ``BENCH_dse.json``) and the ``point``
+#: field of a study trial record (docs/pipeline.md §study) all carry
+#: exactly these keys — asserted in ``tests/test_study.py``, so
+#: downstream tooling cannot silently drift apart.
+EXECUTED_POINT_FIELDS = (
+    "block_h",
+    "m",
+    "d",
+    "steps",
+    "wall_s",
+    "measured_mlups",
+    "measured_gflops",
+    "predicted_gflops",
+    "calibrated_gflops",
+    "rel_error",
+    "rel_error_model",
+    "cached",
+    "reps",
+    "interpret",
+)
+
+
 @dataclass
 class ExecutedPoint:
     """One design point run through the real Pallas kernel."""
@@ -115,8 +140,9 @@ class ExecutedPoint:
 
     def as_dict(self) -> dict:
         """JSON-ready record — the one serialization shared by the CLI's
-        ``--json`` report and ``benchmarks/dse_sweep.py``'s
-        ``BENCH_dse.json`` (one schema, extended in one place)."""
+        ``--json`` report, ``benchmarks/dse_sweep.py``'s
+        ``BENCH_dse.json``, and study trial records (one schema —
+        :data:`EXECUTED_POINT_FIELDS` — extended in one place)."""
         return {
             "block_h": int(self.block_h),
             "m": int(self.m),
@@ -233,6 +259,13 @@ class SearchRunner:
             max_devices = jax.device_count()
         self.max_devices = int(max_devices)
         self.backend = measure.backend_descriptor()
+        # ---- durable study attachment (docs/pipeline.md §study) -----------
+        # Explorer.search wires these after replaying a resumed study's
+        # completed trials into `_walls`: every measured point is then
+        # journaled to the study as a trial, and replayed plans are free.
+        self.study = None
+        self.study_meta: dict = {}
+        self.replayed = 0  # trials replayed into the dedupe table on resume
         # ---- per-search state ---------------------------------------------
         self.budget_spent = 0  # live timings charged against the budget
         self.skipped_devices = 0  # candidates needing more devices than we have
@@ -278,6 +311,60 @@ class SearchRunner:
             return None
         return RunPlan(block_h, m, nsteps, d,
                        self.reps if reps is None else int(reps))
+
+    # ---- cache / study key space -------------------------------------------
+
+    def study_fingerprint(self) -> str | None:
+        """The fingerprint namespace this runner's walls live in.
+
+        An injected timer produces synthetic walls: they live in their
+        own key namespace so an honest run can never be served a
+        fabricated timing — from the cache *or* from a replayed study
+        trial (docs/pipeline.md §study) — and vice versa.
+        """
+        if self.fingerprint is None:
+            return None
+        if self.timer is None:
+            return self.fingerprint
+        return f"injected-timer:{self.fingerprint}"
+
+    def cache_key(self, plan: RunPlan) -> str | None:
+        """The MeasurementCache key this plan's timing is stored under.
+
+        The same content key identifies the plan in study trial records,
+        which is what lets :meth:`Study.replay_into` and the TPE
+        warm-start recognize already-measured plans across processes.
+        ``None`` when the back end has no core fingerprint.
+        """
+        from .. import measure
+
+        fp = self.study_fingerprint()
+        if fp is None:
+            return None
+        return measure.MeasurementCache.make_key(
+            fp, (self.h, self.w),
+            (plan.block_h, plan.m, plan.steps, plan.d),
+            self.backend, self.interpret, plan.reps, self.warmup,
+        )
+
+    def peek_wall(self, plan: RunPlan) -> float | None:
+        """A known wall time for this plan, or None — never measures.
+
+        Checks the in-run dedupe table (which a resumed study replays
+        into) and then the persistent cache, without charging budget or
+        perturbing cache hit/miss statistics. Surrogate strategies use
+        this to warm-start from prior knowledge before sampling.
+        """
+        wall = self._walls.get(plan.key())
+        if wall is not None:
+            return wall
+        if self.cache is not None:
+            key = self.cache_key(plan)
+            if key is not None:
+                rec = self.cache.peek(key)
+                if rec is not None:
+                    return float(rec["wall_s"])
+        return None
 
     # ---- accounting --------------------------------------------------------
 
@@ -334,22 +421,11 @@ class SearchRunner:
                 return None  # this back end cannot execute the point
             key = None
             if self.cache is not None:
-                # An injected timer produces synthetic walls: they live
-                # in their own key namespace so an honest run can never
-                # be served a fabricated timing as a cache hit (and
-                # vice versa).
-                fp = (
-                    self.fingerprint if self.timer is None
-                    else f"injected-timer:{self.fingerprint}"
-                )
-                key = measure.MeasurementCache.make_key(
-                    fp, (self.h, self.w),
-                    (block_h, m, nsteps, d),
-                    self.backend, self.interpret, reps, self.warmup,
-                )
-                rec = self.cache.get(key)
-                if rec is not None:
-                    wall = float(rec["wall_s"])
+                key = self.cache_key(plan)
+                if key is not None:
+                    rec = self.cache.get(key)
+                    if rec is not None:
+                        wall = float(rec["wall_s"])
             if wall is None:
                 if self.budget is not None and self.budget_spent >= self.budget:
                     raise BudgetExhausted(
@@ -377,7 +453,7 @@ class SearchRunner:
                 self.workload, block_h, m, d=d,
             ).sustained_gflops
         headline = calibrated if calibrated is not None else predicted
-        return ExecutedPoint(
+        executed = ExecutedPoint(
             point=point,
             block_h=block_h,
             m=m,
@@ -396,6 +472,23 @@ class SearchRunner:
             cached=cached,
             reps=reps,
         )
+        if self.study is not None:
+            self.study.record_trial(self, executed, **self.study_meta)
+        return executed
+
+    def log_violation(self, coords: tuple, violation: float) -> None:
+        """Journal an infeasible candidate to the attached study.
+
+        Surrogate strategies call this when they observe a candidate
+        with a positive :func:`~repro.core.legalize.constraint_violation`
+        distance; the study keeps it so a resumed search re-learns the
+        infeasible region without re-deriving it. A no-op without a
+        study.
+        """
+        if self.study is not None:
+            self.study.record_violation(
+                self, tuple(coords), float(violation), **self.study_meta
+            )
 
     # ---- internals ---------------------------------------------------------
 

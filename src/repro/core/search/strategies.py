@@ -278,11 +278,14 @@ class SuccessiveHalving:
         return out
 
 
+from .surrogate import TPESearch  # noqa: E402 — registry import, not a cycle
+
 #: CLI / facade registry: ``--strategy`` spellings → constructors.
 STRATEGIES = {
     "exhaustive": ExhaustiveSearch,
     "refine": LocalRefine,
     "halving": SuccessiveHalving,
+    "tpe": TPESearch,
 }
 
 

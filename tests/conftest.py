@@ -1,0 +1,16 @@
+"""Shared fixtures: the deterministic search harness (ISSUE 6).
+
+``search_harness`` gives every test the same deterministic search
+context — a seeded fake :class:`~_search_harness.ModelTimer` and a tmp
+study directory — so strategy/study assertions are exact, never
+statistical (see ``tests/_search_harness.py``).
+"""
+
+import pytest
+
+from _search_harness import SearchHarness
+
+
+@pytest.fixture()
+def search_harness(tmp_path) -> SearchHarness:
+    return SearchHarness(study_dir=tmp_path / "studies")

@@ -427,3 +427,32 @@ def test_resolve_run_plan_threads_halo():
     block_h, m, nsteps = resolve_run_plan(32, pt, halo=2)
     assert 32 % block_h == 0 and m * 2 <= block_h
     assert nsteps == m
+
+
+@given(
+    h=st.sampled_from([32, 64, 256, 4096]),
+    block_h=st.integers(min_value=1, max_value=8192),
+    m=st.integers(min_value=1, max_value=64),
+    halo=st.integers(min_value=1, max_value=3),
+    width=st.integers(min_value=1, max_value=200_000),
+    words=st.integers(min_value=1, max_value=32),
+)
+@settings(max_examples=80, deadline=None)
+def test_prop_blocking_plan_never_exceeds_vmem(h, block_h, m, halo,
+                                               width, words):
+    """ISSUE 6 satellite property: any plan blocking_plan hands back
+    fits the shared VMEM budget — the same invariant the codegen'd
+    kernels rely on to never die with an on-device allocation error."""
+    from repro.core.legalize import constraint_violation
+
+    try:
+        bh, mm = blocking_plan(h, block_h, m, halo=halo, width=width,
+                               words=words)
+    except ValueError:
+        # infeasible request: the continuous distance must agree
+        assert constraint_violation(
+            h, block_h, m, halo=halo, width=width, words=words
+        ) > 0.0
+        return
+    assert h % bh == 0
+    assert stripe_vmem_bytes(bh, mm, width, words, halo) <= VMEM_BYTES

@@ -22,58 +22,36 @@ one end-to-end test drives a real codegen'd kernel through
 
 import numpy as np
 import pytest
+from _hypothesis_stub import HAVE_HYPOTHESIS, given, settings, st
+from _search_harness import (
+    BH_VALUES,
+    H,
+    M_VALUES,
+    TOY,
+    W,
+    ModelTimer,
+    _rf,
+)
 
-from repro.core.dse import StreamWorkload, TPUModel
 from repro.core.explorer import Explorer
-from repro.core.legalize import blocking_plan, legal_block_values
+from repro.core.legalize import (
+    VMEM_BYTES,
+    blocking_plan,
+    constraint_violation,
+    legal_block_values,
+    shard_height,
+    stripe_vmem_bytes,
+)
 from repro.core.measure import MeasurementCache
 from repro.core.search import (
     BudgetExhausted,
     ExhaustiveSearch,
     LocalRefine,
-    RunPlan,
     SearchResult,
     SuccessiveHalving,
+    TPESearch,
     get_strategy,
 )
-
-H, W = 64, 64
-
-#: A light synthetic workload on a 64x64 grid: every (block_h, m) lattice
-#: point below legalizes to a distinct concrete plan (h = 64 has many
-#: divisors), so candidate counts are easy to reason about.
-TOY = StreamWorkload("toy", 8, 2, 2, 50, 40_000, H * W, grid_w=W, halo=1)
-
-#: The CI measurement lattice shape (benchmarks/dse_sweep.py uses the
-#: same bh/m values on its 256-row grid).
-BH_VALUES = (8, 16, 32, 64)
-M_VALUES = (1, 2, 4, 8)
-
-
-class ModelTimer:
-    """Deterministic fake timer: wall time from the analytic model.
-
-    measured_gflops then equals the model's prediction for the
-    *legalized* plan, so strategy decisions follow the model ranking
-    exactly — unless a plan is listed in ``boost``, which divides its
-    wall time (the "model mis-ranks this point" scenario). Every live
-    timing is recorded in ``calls``.
-    """
-
-    def __init__(self, workload=TOY, h=H, w=W, boost=()):
-        self.model = TPUModel()
-        self.workload, self.h, self.w = workload, h, w
-        self.boost = dict(boost)  # (block_h, m, d) -> speedup factor
-        self.calls: list[RunPlan] = []
-
-    def __call__(self, plan, run, reps, warmup):
-        self.calls.append(plan)
-        pred = self.model.evaluate(
-            self.workload, plan.block_h, plan.m, d=plan.d
-        ).sustained_gflops
-        sites = self.h * self.w * plan.steps
-        wall = sites * self.workload.flops_per_elem / (pred * 1e9)
-        return wall / self.boost.get((plan.block_h, plan.m, plan.d), 1.0)
 
 
 @pytest.fixture()
@@ -86,10 +64,6 @@ def sweep(ex):
     return ex.sweep_tpu(
         bh_values=BH_VALUES, m_values=M_VALUES, d_values=(1,)
     )
-
-
-def _rf(nsteps, m, block_h, d):
-    return lambda: None  # never called: the fake timer ignores `run`
 
 
 def _search(ex, sweep, timer, **kw):
@@ -106,6 +80,7 @@ def test_get_strategy_registry():
     assert isinstance(get_strategy("exhaustive"), ExhaustiveSearch)
     assert isinstance(get_strategy("refine"), LocalRefine)
     assert isinstance(get_strategy("halving"), SuccessiveHalving)
+    assert isinstance(get_strategy("tpe"), TPESearch)
     inst = SuccessiveHalving(eta=2)
     assert get_strategy(inst) is inst
     assert isinstance(get_strategy(LocalRefine), LocalRefine)
@@ -160,7 +135,7 @@ def test_exhaustive_frontier_only_reproduces_execute_frontier(ex, sweep):
 # ----------------------- budget: hard, never exceeded -----------------------
 
 
-@pytest.mark.parametrize("strat", ["exhaustive", "refine", "halving"])
+@pytest.mark.parametrize("strat", ["exhaustive", "refine", "halving", "tpe"])
 def test_budget_never_exceeded(ex, sweep, strat):
     for budget in (1, 3, 7):
         timer = ModelTimer()
@@ -370,6 +345,118 @@ def test_search_result_schema(ex, sweep):
         assert set(m) == {"block_h", "m", "steps", "d", "reps", "count"}
         assert m["count"] >= 1
     assert d["best"] == res.best.as_dict()
+
+
+# ----------------------- legalize: deterministic properties -----------------
+
+
+def test_constraint_violation_zero_iff_feasible():
+    """ISSUE 6 satellite: the continuous distance is 0 exactly when
+    blocking_plan would produce a legal plan — over a dense grid of
+    (h, block_h, m, d, width) requests, including VMEM-tight ones."""
+    words = 8
+    for h in (7, 16, 60, 64):
+        for m in (1, 2, 4, 16):
+            for d in (1, 2, 3):
+                for width in (0, 64, 600_000, 3_000_000):
+                    v = constraint_violation(
+                        h, 16, m, halo=1, width=width, words=words, d=d
+                    )
+                    try:
+                        blocking_plan(
+                            h, 16, m, halo=1, width=width, words=words, d=d
+                        )
+                        legal = True
+                    except ValueError:
+                        legal = False
+                    assert (v == 0.0) == legal, (h, m, d, width)
+                    assert v >= 0.0
+
+
+def test_constraint_violation_monotone_in_vmem_overshoot():
+    """The deeper the smallest legal stripe overflows VMEM, the larger
+    the distance — the gradient surrogate samplers follow."""
+    words = 8
+    widths = (1_000_000, 2_000_000, 4_000_000, 8_000_000)
+    vals = [
+        constraint_violation(64, 64, 2, halo=1, width=w, words=words)
+        for w in widths
+    ]
+    assert vals[0] > 0.0  # all of these overflow the budget
+    assert all(b > a for a, b in zip(vals, vals[1:]))  # strictly monotone
+    # ... and scale-free: violation is the fractional overshoot
+    need = min(
+        stripe_vmem_bytes(v, 2, widths[0], words, 1)
+        for v in legal_block_values(64, 2, halo=1)
+    )
+    assert vals[0] == pytest.approx((need - VMEM_BYTES) / VMEM_BYTES)
+
+
+def test_constraint_violation_unshardable_and_unsourceable():
+    # h % d != 0: no closest legal plan at all — above every VMEM case
+    assert constraint_violation(64, 16, 2, d=3) > 1.0
+    # halo taller than the shard: the m-shrink loop cannot save it
+    assert constraint_violation(4, 4, 1, halo=8) > 1.0
+    with pytest.raises(ValueError):
+        constraint_violation(0, 8, 1)
+    with pytest.raises(ValueError):
+        constraint_violation(64, 8, 1, d=0)
+
+
+# ----------------------- legalize: hypothesis properties ---------------------
+
+
+@given(
+    h=st.integers(min_value=1, max_value=512),
+    m=st.integers(min_value=1, max_value=64),
+    halo=st.integers(min_value=0, max_value=4),
+    d=st.sampled_from([1, 2, 4]),
+)
+@settings(max_examples=80, deadline=None)
+def test_prop_legal_block_values_divide_the_shard(h, m, halo, d):
+    if h % d:
+        with pytest.raises(ValueError, match="shards"):
+            legal_block_values(h, m, halo=halo, d=d)
+        return
+    chain = legal_block_values(h, m, halo=halo, d=d)
+    local_h = shard_height(h, d)
+    for v in chain:
+        assert local_h % v == 0
+        assert v >= max(1, min(m, local_h) * halo) or halo == 0
+    assert list(chain) == sorted(chain)
+
+
+@given(
+    h=st.sampled_from([16, 64, 120, 256]),
+    block_h=st.integers(min_value=1, max_value=512),
+    m=st.integers(min_value=1, max_value=32),
+    width=st.integers(min_value=1, max_value=400_000),
+    words=st.integers(min_value=1, max_value=16),
+)
+@settings(max_examples=80, deadline=None)
+def test_prop_blocking_plan_respects_vmem(h, block_h, m, width, words):
+    """Whenever blocking_plan returns, its stripe fits the VMEM budget
+    — and constraint_violation agrees it is feasible."""
+    try:
+        bh, mm = blocking_plan(h, block_h, m, halo=1, width=width,
+                               words=words)
+    except ValueError:
+        assert constraint_violation(
+            h, block_h, m, halo=1, width=width, words=words
+        ) > 0.0
+        return
+    assert h % bh == 0 and mm * 1 <= bh * mm  # legal divisor, sane m
+    assert stripe_vmem_bytes(bh, mm, width, words, 1) <= VMEM_BYTES
+    assert constraint_violation(
+        h, block_h, m, halo=1, width=width, words=words
+    ) == 0.0
+
+
+def test_hypothesis_stub_contract():
+    """The shim must expose the four names whether or not hypothesis is
+    installed (so this module always collects)."""
+    assert isinstance(HAVE_HYPOTHESIS, bool)
+    assert callable(given) and callable(settings)
 
 
 def test_legal_block_values_units():

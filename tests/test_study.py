@@ -1,0 +1,352 @@
+"""Durable studies + TPE surrogate search (docs/pipeline.md §study,
+DESIGN.md §11) on the deterministic harness of ``_search_harness.py``.
+
+The load-bearing assertions (ISSUE 6 acceptance criteria):
+
+* an interrupted study resumed by name replays completed trials into
+  the runner's dedupe table and re-measures **zero** of them (a fully
+  replayed resume spends 0 budget and makes 0 timer calls);
+* a seeded TPESearch reproduces the identical trial sequence twice;
+* seeded TPE matches >= 95% of the exhaustive best measured GFLOPS
+  using <= half the exhaustive measurement count, for both the lbm and
+  diffusion apps;
+* warm-start from a pre-populated MeasurementCache skips every
+  already-measured plan;
+* two processes appending to one study journal (and merging one
+  measurement cache) concurrently lose no records;
+* one serialization schema: EXECUTED_POINT_FIELDS for every executed
+  point (CLI --json, BENCH_dse.json, study trial records) and
+  SEARCH_RESULT_FIELDS for every search result.
+"""
+
+import json
+import subprocess
+import sys
+from pathlib import Path
+
+import pytest
+from _search_harness import ModelTimer, SearchHarness, _rf
+
+from repro.core.dse import TPUModel
+from repro.core.measure import MeasurementCache
+from repro.core.search import (
+    EXECUTED_POINT_FIELDS,
+    SEARCH_RESULT_FIELDS,
+    ExhaustiveSearch,
+    SearchRunner,
+    Study,
+    TPESearch,
+    default_study_dir,
+)
+from repro.core.search.study import TRIAL_CONTEXT_FIELDS
+
+
+def _tpe(**kw):
+    kw.setdefault("seed", 0)
+    return TPESearch(**kw)
+
+
+# ----------------------- one schema, everywhere -----------------------
+
+
+def test_executed_point_schema_is_single_source(search_harness):
+    """ISSUE 6 satellite: the CLI report, study trial records and BENCH
+    search sections must all carry exactly EXECUTED_POINT_FIELDS /
+    SEARCH_RESULT_FIELDS — schema drift is a test failure, not a
+    downstream surprise."""
+    hz = search_harness
+    res = hz.search(hz.sweep(), strategy=_tpe(), budget=4,
+                    study="schema", cache_tag="toy")
+    d = res.as_dict()
+    assert tuple(d.keys()) == SEARCH_RESULT_FIELDS
+    assert d["study"] == "schema"
+    for e in d["executed"]:
+        assert tuple(e.keys()) == EXECUTED_POINT_FIELDS
+    assert tuple(d["best"].keys()) == EXECUTED_POINT_FIELDS
+
+    # the study journal's trial records carry the same point schema
+    st = Study.resume("schema", hz.study_dir)
+    trials = [r for r in st.records if r.get("point")]
+    assert trials
+    for rec in trials:
+        # journal lines are dumped with sort_keys: same key *set*
+        assert set(rec["point"]) == set(EXECUTED_POINT_FIELDS)
+        for f in TRIAL_CONTEXT_FIELDS:
+            assert f in rec
+
+
+# ----------------------- resume: zero re-measurement -----------------------
+
+
+def test_interrupted_study_resumes_with_zero_remeasurement(search_harness):
+    """ISSUE 6 acceptance: interrupt a budgeted TPE search, resume by
+    study name — every completed trial replays, none re-measures."""
+    hz = search_harness
+    t1 = hz.timer()
+    first = hz.search(hz.sweep(), timer=t1, strategy=_tpe(), budget=4,
+                      study="interrupted")
+    assert first.budget_spent == 4 == len(t1.calls)  # cut off mid-study
+    measured_plans = {p.key() for p in t1.calls}
+
+    # Resume by name with room to continue: replays all completed
+    # trials, then spends budget only on plans nobody measured yet.
+    t2 = hz.timer()
+    resumed = hz.search(hz.sweep(), timer=t2, strategy=_tpe(), budget=4,
+                        study="interrupted")
+    assert resumed.replayed == len(measured_plans)
+    assert resumed.budget_spent <= 4
+    assert {p.key() for p in t2.calls}.isdisjoint(measured_plans)
+
+    # A resume whose max_trials the replayed trials already cover
+    # spends exactly zero budget and zero timer calls.
+    st = Study.resume("interrupted", hz.study_dir)
+    n = len(st.records)
+    t3 = hz.timer()
+    done = hz.search(hz.sweep(), timer=t3,
+                     strategy=_tpe(max_trials=n), budget=4,
+                     study="interrupted")
+    assert done.budget_spent == 0 and not t3.calls
+    assert done.replayed == n
+
+
+def test_replay_is_scoped_by_fingerprint_and_context(search_harness):
+    """Trials replay only into a matching measurement context: another
+    kernel's fingerprint (or an honest run vs an injected timer's
+    namespaced walls) gets nothing."""
+    hz = search_harness
+    hz.search(hz.sweep(), strategy=_tpe(), budget=4,
+              study="scoped", cache_tag="kern-a")
+    st = Study.resume("scoped", hz.study_dir)
+
+    def runner(tag, timer):
+        return SearchRunner(
+            workload=hz.workload, grid_shape=(hz.h, hz.w), run_factory=_rf,
+            model=TPUModel(), fingerprint=tag, calibrate=False, cache=False,
+            timer=timer, max_devices=1,
+        )
+
+    same = runner("kern-a", hz.timer())
+    assert st.replay_into(same) > 0
+
+    other = runner("kern-b", hz.timer())
+    assert st.replay_into(other) == 0  # different kernel, no replay
+
+    honest = runner("kern-a", None)  # timer=None: the honest namespace
+    assert st.replay_into(honest) == 0  # synthetic walls never leak
+
+
+# ----------------------- determinism -----------------------
+
+
+def test_tpe_seed_reproduces_identical_trial_sequence(search_harness):
+    """Same seed => the identical sequence of executed plans, twice."""
+    hz = search_harness
+    sweep = hz.sweep(d_values=(1,))
+
+    def trial_seq(seed, study):
+        t = hz.timer(noise=0.05)
+        res = hz.search(sweep, timer=t, strategy=_tpe(seed=seed),
+                        budget=8, study=study)
+        return [(e.block_h, e.m, e.d, e.steps) for e in res.executed]
+
+    a = trial_seq(7, "det-a")
+    b = trial_seq(7, "det-b")
+    assert a == b and len(a) == 8
+
+
+# ----------------------- acceptance: TPE vs exhaustive -----------------------
+
+
+def _app_harness(name, tmp):
+    if name == "lbm":
+        from repro.apps import lbm
+
+        sim = lbm.LBMSimulation(lbm.LBMProblem(64, 64, mode="wrap"))
+    else:
+        from repro.apps import diffusion as dif
+
+        sim = dif.DiffusionSimulation(64, 64, alpha=0.2)
+    ex = sim.explorer()
+    return SearchHarness(study_dir=tmp / "studies", workload=ex.workload,
+                         explorer=ex)
+
+
+@pytest.mark.parametrize("app", ["lbm", "diffusion"])
+def test_tpe_matches_exhaustive_best_at_half_budget(app, tmp_path):
+    """ISSUE 6 acceptance: seeded TPE >= 95% of the exhaustive best
+    measured GFLOPS at <= half the exhaustive measurement count, on the
+    deterministic ModelTimer harness, for both apps."""
+    hz = _app_harness(app, tmp_path)
+    sweep = hz.sweep()
+
+    t_ex = hz.timer(noise=0.05)
+    exhaustive = hz.search(
+        sweep, timer=t_ex, strategy=ExhaustiveSearch(frontier_only=False)
+    )
+    assert exhaustive.budget_spent > 8  # wide enough to mean something
+    best = exhaustive.best.measured_gflops
+
+    t_tpe = hz.timer(noise=0.05)
+    res = hz.search(sweep, timer=t_tpe, strategy=_tpe(),
+                    budget=exhaustive.budget_spent // 2)
+    assert res.budget_spent <= exhaustive.budget_spent // 2
+    assert res.budget_spent == len(t_tpe.calls)
+    assert res.best.measured_gflops >= 0.95 * best, app
+
+
+# ----------------------- warm start from the cache -----------------------
+
+
+def test_tpe_warm_starts_from_prepopulated_cache(search_harness, tmp_path):
+    """A fresh TPE search over plans the persistent MeasurementCache
+    already holds observes them for free — zero live timings."""
+    hz = search_harness
+    sweep = hz.sweep()
+    cache = MeasurementCache(tmp_path / "m.json")
+
+    t1 = hz.timer()
+    full = hz.search(sweep, timer=t1,
+                     strategy=ExhaustiveSearch(frontier_only=False),
+                     cache=cache, cache_tag="toy")
+    assert full.budget_spent == len(t1.calls) > 8
+
+    t2 = hz.timer()
+    res = hz.search(sweep, timer=t2, strategy=_tpe(), budget=4,
+                    cache=cache, cache_tag="toy")
+    assert res.budget_spent == 0 and not t2.calls  # all warm-started
+    assert res.executed and all(e.cached for e in res.executed)
+
+
+# ----------------------- violations: free, journaled -----------------------
+
+
+def test_tpe_observes_violations_without_spending_budget(search_harness):
+    """Candidates with no legal plan become continuous-violation
+    observations: journaled to the study, charged zero budget."""
+    hz = search_harness
+    sweep = hz.sweep()
+    st = Study("viol", hz.study_dir)
+    timer = hz.timer()
+    # width/words chosen so *every* stripe overflows VMEM: the whole
+    # lattice is infeasible and TPE must spend nothing.
+    runner = SearchRunner(
+        workload=hz.workload, grid_shape=(hz.h, hz.w), run_factory=_rf,
+        model=TPUModel(), fingerprint="toy", width=3_000_000, words=8,
+        calibrate=False, cache=False, timer=timer, max_devices=1,
+    )
+    runner.study = st
+    runner.study_meta = {"strategy": "tpe", "seed": 0}
+    executed = _tpe().search(sweep, runner)
+    assert executed == [] and runner.budget_spent == 0 and not timer.calls
+    viols = st.violations_for(runner)
+    assert viols and all(r["violation"] > 0.0 for r in viols)
+    assert all(len(r["coords"]) == 3 for r in viols)
+
+
+# ----------------------- concurrency: nothing lost -----------------------
+
+
+_WRITER = r"""
+import sys
+from repro.core.measure import MeasurementCache
+from repro.core.search.study import Study
+
+tag, study_dir, cache_path, n = (
+    sys.argv[1], sys.argv[2], sys.argv[3], int(sys.argv[4])
+)
+
+
+class _Ctx:  # the runner surface Study.record_* needs
+    h, w = 64, 64
+    backend = "test"
+    interpret = True
+    warmup = 1
+
+    def study_fingerprint(self):
+        return "concurrent"
+
+    def cache_key(self, plan):
+        return None
+
+
+st = Study("shared", study_dir)
+cache = MeasurementCache(cache_path)
+ctx = _Ctx()
+for i in range(n):
+    st.record_violation(ctx, (int(tag), i, 1), 1.0 + i)
+    cache.put(f"{tag}:{i}", {"wall_s": float(i)})
+"""
+
+
+def test_concurrent_study_appends_and_cache_merges_lose_nothing(tmp_path):
+    """ISSUE 6 satellite: two processes appending trials to one study
+    journal and putting into one MeasurementCache concurrently — every
+    record from both writers survives."""
+    n = 50
+    study_dir, cache_path = tmp_path / "studies", tmp_path / "cache.json"
+    procs = [
+        subprocess.Popen(
+            [sys.executable, "-c", _WRITER, tag, str(study_dir),
+             str(cache_path), str(n)],
+            env={**__import__("os").environ, "JAX_PLATFORMS": "cpu",
+                 "PYTHONPATH": str(Path(__file__).parent.parent / "src")},
+            stdout=subprocess.PIPE, stderr=subprocess.PIPE,
+        )
+        for tag in ("1", "2")
+    ]
+    for p in procs:
+        _, err = p.communicate(timeout=240)
+        assert p.returncode == 0, err.decode()
+
+    st = Study("shared", study_dir)
+    assert len(st.records) == 2 * n  # no torn/lost journal lines
+    by_tag = {"1": 0, "2": 0}
+    for rec in st.records:
+        by_tag[str(rec["coords"][0])] += 1
+    assert by_tag == {"1": n, "2": n}
+
+    cache = MeasurementCache(cache_path)
+    keys = {f"{tag}:{i}" for tag in ("1", "2") for i in range(n)}
+    assert all(cache.peek(k) is not None for k in keys)  # merge lost none
+
+
+# ----------------------- journal robustness + reporting ----------------------
+
+
+def test_study_tolerates_torn_trailing_line(tmp_path):
+    st = Study("torn", tmp_path)
+    path = Path(st.path)
+    path.parent.mkdir(parents=True, exist_ok=True)
+    good = {"v": 1, "study": "torn", "fingerprint": "f", "grid": [4, 4],
+            "backend": "b", "interpret": True, "warmup": 1,
+            "coords": [1, 1, 1], "violation": 1.0, "point": None}
+    path.write_text(json.dumps(good) + "\n" + '{"v": 1, "trunc',
+                    encoding="utf-8")
+    st = Study("torn", tmp_path)
+    assert len(st.records) == 1  # the torn line is dropped, not fatal
+
+
+def test_study_name_validation(tmp_path):
+    for bad in ("", "../escape", ".hidden"):
+        with pytest.raises(ValueError):
+            Study(bad, tmp_path)
+    assert default_study_dir()  # resolvable without env
+
+
+def test_study_report_text_and_html(search_harness, tmp_path):
+    hz = search_harness
+    hz.search(hz.sweep(), strategy=_tpe(), budget=6, study="rep")
+    st = Study.resume("rep", hz.study_dir)
+    text = st.report_text()
+    assert "best:" in text and "convergence" in text and "pareto" in text
+    html = st.report_html()
+    assert html.startswith("<!DOCTYPE html>")
+    assert "<svg" in html and "Pareto front" in html
+    assert "<script" not in html  # self-contained, no external assets
+
+    out = st.report(out_dir=tmp_path, basename="rep")
+    assert Path(out["text"]).read_text(encoding="utf-8").strip()
+    assert "<svg" in Path(out["html"]).read_text(encoding="utf-8")
+    # convergence is monotone nondecreasing by construction
+    conv = st.convergence()
+    assert all(b[1] >= a[1] for a, b in zip(conv, conv[1:]))
