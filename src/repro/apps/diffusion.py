@@ -148,7 +148,7 @@ class DiffusionSimulation:
         if block_h is None:
             from repro.core.legalize import blocking_plan
 
-            block_h, m = blocking_plan(
+            block_h, m, _ = blocking_plan(
                 self.height, 32, m, halo=self.kernel.halo, d=d,
             )
         kern = self.kernel if d == 1 else self.kernel.sharded(d)

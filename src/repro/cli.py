@@ -102,6 +102,14 @@ def explore_main(argv: list[str] | None = None) -> None:
     ap.add_argument("--no-cache", action="store_true",
                     help="skip the persistent measurement cache and "
                          "re-time every point")
+    ap.add_argument("--double-buffer", action=argparse.BooleanOptionalAction,
+                    default=True,
+                    help="stream stripes through ping/pong VMEM buffers "
+                         "(DMA/compute overlap, docs/pipeline.md §stream); "
+                         "--no-double-buffer requests the single-buffer "
+                         "streaming fallback (half the VMEM, no overlap). "
+                         "The legalizer may still fall back per point when "
+                         "the ping/pong pair cannot fit")
     ap.add_argument("--study", type=str, default=None, metavar="NAME",
                     help="journal every trial into a durable named study "
                          "(docs/pipeline.md §study); re-running with the "
@@ -144,7 +152,8 @@ def explore_main(argv: list[str] | None = None) -> None:
     print("2) Hardware adaptation: temporal blocking on TPU v5e,")
     print(f"   device axis d ∈ {d_values} (sharding + halo exchange)")
     print("=" * 72)
-    tsweep = ex.sweep_tpu(d_values=d_values)
+    tsweep = ex.sweep_tpu(d_values=d_values,
+                          double_buffer=args.double_buffer)
     print(tsweep.table(k=8))
     print()
     print("TPU Pareto frontier:")
@@ -192,7 +201,8 @@ def explore_main(argv: list[str] | None = None) -> None:
         msim = lbm.LBMSimulation(lbm.LBMProblem(256, 128, mode="wrap"))
         mex = msim.explorer()
         msweep = mex.sweep_tpu(bh_values=(8, 16, 32, 64),
-                               m_values=(1, 2, 4, 8), d_values=exec_d)
+                               m_values=(1, 2, 4, 8), d_values=exec_d,
+                               double_buffer=args.double_buffer)
         f0, attr, _ = lbm.taylor_green_init(256, 128)
         mres = mex.search(
             msweep, msim.stream_state(f0, attr), msim.stream_regs(),
@@ -215,7 +225,8 @@ def explore_main(argv: list[str] | None = None) -> None:
         dsim = dif.DiffusionSimulation(256, 128, alpha=0.2)
         dex = dsim.explorer()
         dsweep = dex.sweep_tpu(bh_values=(8, 16, 32, 64),
-                               m_values=(1, 2, 4, 8), d_values=exec_d)
+                               m_values=(1, 2, 4, 8), d_values=exec_d,
+                               double_buffer=args.double_buffer)
         u0, _ = dif.sine_init(256, 128)
         dres = dex.search(dsweep, dsim.state(u0), (dsim.alpha,),
                           strategy=strategy, budget=args.budget,
@@ -234,6 +245,7 @@ def explore_main(argv: list[str] | None = None) -> None:
         report["measure"] = {
             "reps": args.reps,
             "calibrate": bool(args.calibrate),
+            "double_buffer": bool(args.double_buffer),
             "strategy": args.strategy,
             "budget": args.budget,
             "cache": None if mcache is None else mcache.stats(),

@@ -347,10 +347,21 @@ class StreamKernel:
         self._regs = list(core.regs)
         self._params = dict(core.params)
         from repro.kernels.spd_stream.spd_stream import spd_multistep
+        from repro.kernels.spd_stream.streaming import spd_multistep_streamed
 
+        # Declarative BlockSpec launch: the reference pipeline (tests
+        # compare the streamed path against it bit for bit).
         self._multistep = jax.jit(
             functools.partial(spd_multistep, self._step_fn, halo=self.halo),
             static_argnames=("m", "block_h", "interpret"),
+        )
+        # Manually pipelined launch (docs/pipeline.md §stream): the
+        # execution path, with double_buffer a real plan knob.
+        self._streamed = jax.jit(
+            functools.partial(
+                spd_multistep_streamed, self._step_fn, halo=self.halo
+            ),
+            static_argnames=("m", "block_h", "double_buffer", "interpret"),
         )
         self._sharded: dict[int, object] = {}
         # jit'd so XLA applies the same mul-add contractions as inside the
@@ -382,20 +393,28 @@ class StreamKernel:
         return jnp.asarray(vals, jnp.float32)
 
     def __call__(self, state, regs: Sequence = (), *, m: int = 1,
-                 block_h: int = 32, interpret: bool = True):
-        """One fused launch: advance ``state`` by ``m`` time steps."""
-        return self._multistep(
+                 block_h: int = 32, double_buffer: bool = True,
+                 interpret: bool = True):
+        """One fused launch: advance ``state`` by ``m`` time steps.
+
+        ``double_buffer`` selects the streamed launch's buffer protocol
+        (ping/pong vs single-buffer, docs/pipeline.md §stream); both are
+        bitwise identical to the declarative BlockSpec launch.
+        """
+        return self._streamed(
             state, self._scal(regs), m=m, block_h=block_h,
-            interpret=interpret,
+            double_buffer=double_buffer, interpret=interpret,
         )
 
     def run_blocked(self, state, regs: Sequence = (), *, steps: int,
-                    m: int, block_h: int, interpret: bool = True):
+                    m: int, block_h: int, double_buffer: bool = True,
+                    interpret: bool = True):
         """Advance ``steps`` time steps using m-fused kernel launches."""
         from repro.kernels.spd_stream.ops import stream_run_blocked
 
         return stream_run_blocked(
-            self._multistep, state, self._scal(regs), steps=steps, m=m,
+            functools.partial(self._streamed, double_buffer=double_buffer),
+            state, self._scal(regs), steps=steps, m=m,
             block_h=block_h, interpret=interpret,
         )
 
@@ -424,18 +443,19 @@ class StreamKernel:
 
         The point is legalized with the shared
         :func:`repro.core.legalize.resolve_run_plan`, using this kernel's
-        inferred halo and the state's concrete width for the VMEM clamp.
-        Returns ``(result, (block_h, m))``.
+        inferred halo and the state's concrete width for the VMEM clamp
+        (with the double-buffered→single-buffered streaming fallback).
+        Returns ``(result, (block_h, m, double_buffer))``.
         """
         p, h, w = state.shape
-        block_h, m, nsteps = resolve_run_plan(
+        block_h, m, nsteps, double_buffer = resolve_run_plan(
             h, point, steps, halo=self.halo, width=w, words=p,
         )
         out = self.run_blocked(
             state, regs, steps=nsteps, m=m, block_h=block_h,
-            interpret=interpret,
+            double_buffer=double_buffer, interpret=interpret,
         )
-        return out, (block_h, m)
+        return out, (block_h, m, double_buffer)
 
     # ---- the compiler's reference function --------------------------------
 

@@ -31,6 +31,18 @@ run is **bit-identical** to the single-device kernel for any legal
 ``d`` — the correctness contract asserted in ``tests/test_distribute.py``
 for ``d ∈ {1, 2, 4}`` on both shipped apps.
 
+**Overlapped exchange** (docs/pipeline.md §overlap): only the shard's
+two *edge* blocks read exchanged rows — every interior block's stripe
+is fully local. When a shard has at least three blocks, the fused
+launch is decomposed into an interior launch that needs nothing from
+the ``ppermute`` collectives plus two one-block edge launches that do,
+so XLA is free to run the halo exchange on the ICI links while the
+interior blocks compute. Each block's stripe is assembled from exactly
+the same rows either way, which keeps the decomposition bitwise
+identical to the monolithic launch (and the sharded run bit-identical
+to single-device); shards shorter than three blocks fall back to the
+monolithic exchange-then-compute path.
+
 Plans come from the shared legalizer (docs/pipeline.md §legalize) with
 per-shard accounting: ``blocking_plan(..., d=d)`` requires ``d | H`` and
 tiles the *shard* height. Off-TPU, ``d`` host devices are available under
@@ -106,23 +118,28 @@ class ShardedStreamKernel:
     wrapped kernel (no mesh, no exchange).
     """
 
-    def __init__(self, kernel, d: int, devices: Sequence | None = None):
+    def __init__(self, kernel, d: int, devices: Sequence | None = None,
+                 overlap: bool = True):
         self.kernel = kernel
         self.d = int(d)
         self.halo = kernel.halo
+        self.overlap = bool(overlap)
         self.mesh = ring_mesh(self.d, devices) if self.d > 1 else None
         self._jitted: dict = {}
 
     # ---- the shard-mapped launch loop --------------------------------------
 
-    def _fn(self, steps: int, m: int, block_h: int, interpret: bool):
+    def _fn(self, steps: int, m: int, block_h: int, double_buffer: bool,
+            overlap: bool, interpret: bool):
         """Build (and cache) the jitted shard_map'd run for one plan."""
-        key = (steps, m, block_h, interpret)
+        key = (steps, m, block_h, double_buffer, overlap, interpret)
         cached = self._jitted.get(key)
         if cached is not None:
             return cached
-        from repro.kernels.spd_stream.sharded import spd_multistep_halo
-        from repro.kernels.spd_stream.spd_stream import spd_multistep
+        from repro.kernels.spd_stream.streaming import (
+            spd_multistep_halo_streamed,
+            spd_multistep_streamed,
+        )
 
         d, halo = self.d, self.halo
         step_fn = self.kernel._step_fn
@@ -132,13 +149,20 @@ class ShardedStreamKernel:
 
         def local_run(local, scal):
             p, lh, w = local.shape
+            nblk = lh // block_h
+
+            def shard_launch(ext, scal):
+                return spd_multistep_halo_streamed(
+                    step_fn, ext, scal, m=m, block_h=block_h, halo=halo,
+                    double_buffer=double_buffer, interpret=interpret,
+                )
 
             def body(_, cur):
                 if mh == 0:
                     # Elementwise core: shards never read each other.
-                    return spd_multistep(
+                    return spd_multistep_streamed(
                         step_fn, cur, scal, m=m, block_h=block_h, halo=0,
-                        interpret=interpret,
+                        double_buffer=double_buffer, interpret=interpret,
                     )
                 # Ring halo exchange: receive the up-neighbor's bottom
                 # rows and the down-neighbor's top rows (periodic in y
@@ -148,11 +172,29 @@ class ShardedStreamKernel:
                 )
                 dn = jax.lax.ppermute(cur[:, :mh, :], DEVICE_AXIS, perm_up)
                 pad = jnp.zeros((p, block_h - mh, w), cur.dtype)
+                if overlap and nblk >= 3:
+                    # Overlapped exchange (docs/pipeline.md §overlap):
+                    # the interior blocks 1..nblk-2 read only local rows
+                    # — the shard itself is their guard-extended array —
+                    # so their launch carries no data dependence on the
+                    # ppermute results and runs while the exchange is in
+                    # flight. Only the two one-block edge launches
+                    # consume the received rows. Every block's stripe is
+                    # assembled from the same rows as the monolithic
+                    # launch below, keeping the decomposition (and the
+                    # sharded run) bitwise identical.
+                    interior = shard_launch(cur, scal)
+                    ext_top = jnp.concatenate(
+                        [pad, up, cur[:, :2 * block_h, :]], axis=1
+                    )
+                    ext_bot = jnp.concatenate(
+                        [cur[:, lh - 2 * block_h:, :], dn, pad], axis=1
+                    )
+                    top = shard_launch(ext_top, scal)
+                    bot = shard_launch(ext_bot, scal)
+                    return jnp.concatenate([top, interior, bot], axis=1)
                 ext = jnp.concatenate([pad, up, cur, dn, pad], axis=1)
-                return spd_multistep_halo(
-                    step_fn, ext, scal, m=m, block_h=block_h, halo=halo,
-                    interpret=interpret,
-                )
+                return shard_launch(ext, scal)
 
             return jax.lax.fori_loop(0, steps // m, body, local)
 
@@ -167,13 +209,22 @@ class ShardedStreamKernel:
     # ---- launches (mirroring StreamKernel) ---------------------------------
 
     def run_blocked(self, state, regs: Sequence = (), *, steps: int,
-                    m: int, block_h: int, interpret: bool = True):
-        """Advance ``steps`` time steps, halo-exchanging every m steps."""
+                    m: int, block_h: int, double_buffer: bool = True,
+                    overlap: bool | None = None, interpret: bool = True):
+        """Advance ``steps`` time steps, halo-exchanging every m steps.
+
+        ``double_buffer`` selects the per-shard streamed launch's buffer
+        protocol (docs/pipeline.md §stream); ``overlap`` toggles the
+        exchange/compute overlap decomposition (docs/pipeline.md
+        §overlap, default: the kernel's construction-time setting).
+        """
         if self.d == 1:
             return self.kernel.run_blocked(
                 state, regs, steps=steps, m=m, block_h=block_h,
-                interpret=interpret,
+                double_buffer=double_buffer, interpret=interpret,
             )
+        if overlap is None:
+            overlap = self.overlap
         p, h, w = state.shape
         local_h = shard_height(h, self.d)
         if local_h % block_h:
@@ -188,7 +239,8 @@ class ShardedStreamKernel:
             )
         if steps % m:
             raise ValueError(f"steps={steps} must be a multiple of m={m}")
-        fn = self._fn(steps, m, block_h, interpret)
+        fn = self._fn(steps, m, block_h, bool(double_buffer), bool(overlap),
+                      interpret)
         return fn(state, self.kernel._scal(regs))
 
     def run_for_point(self, state, regs: Sequence = (), *, point,
@@ -197,14 +249,15 @@ class ShardedStreamKernel:
 
         The point is legalized *per shard* with the shared
         :func:`repro.core.legalize.resolve_run_plan` (``d`` = this
-        kernel's shard count). Returns ``(result, (block_h, m))``.
+        kernel's shard count). Returns
+        ``(result, (block_h, m, double_buffer))``.
         """
         p, h, w = state.shape
-        block_h, m, nsteps = resolve_run_plan(
+        block_h, m, nsteps, double_buffer = resolve_run_plan(
             h, point, steps, halo=self.halo, width=w, words=p, d=self.d,
         )
         out = self.run_blocked(
             state, regs, steps=nsteps, m=m, block_h=block_h,
-            interpret=interpret,
+            double_buffer=double_buffer, interpret=interpret,
         )
-        return out, (block_h, m)
+        return out, (block_h, m, double_buffer)

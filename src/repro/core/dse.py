@@ -39,7 +39,7 @@ from typing import Iterable, Sequence
 
 import numpy as np
 
-from .legalize import VMEM_BYTES, VMEM_DOUBLE_BUFFER
+from .legalize import VMEM_BYTES, stripe_vmem_bytes
 
 # --------------------------------------------------------------------------
 # Workload description
@@ -426,13 +426,14 @@ class TPUModel:
             pt.feasible = False
             pt.limits.append(f"shard {w.elems // w.grid_w}%{d}!=0")
 
-        # VMEM residency: (bh + 2·m·halo) rows x width x state words, x2 if
-        # the pipeline double-buffers the next block's DMA — the same stripe
-        # geometry repro.core.legalize clamps against, so a feasible point
-        # is never silently shrunk at run time.
-        rows = bh + 2 * m * w.halo
-        vmem = (rows * grid_w * w.words_in * 4
-                * (VMEM_DOUBLE_BUFFER if double_buffer else 1))
+        # VMEM residency: priced by the legalizer's own stripe formula
+        # (repro.core.legalize.stripe_vmem_bytes) — one source of truth,
+        # so a feasible point is never silently shrunk at run time and
+        # model/legalizer budgets cannot drift apart.
+        vmem = stripe_vmem_bytes(
+            bh, m, grid_w, w.words_in, halo=w.halo,
+            double_buffer=double_buffer,
+        )
         if vmem > t.vmem_bytes:
             pt.feasible = False
             pt.limits.append(f"VMEM {vmem}>{t.vmem_bytes}")
@@ -477,6 +478,7 @@ class TPUModel:
             "block_rows": bh,
             "vmem_frac": vmem / t.vmem_bytes,
             "d": d,
+            "double_buffer": bool(double_buffer),
         }
         return pt
 
@@ -503,9 +505,10 @@ class TPUModel:
         grid_w = w.grid_w or int(math.sqrt(w.elems))
         bytes_per_elem = 4 * (w.words_in + w.words_out)
 
-        rows = bh + 2 * m * w.halo
-        vmem = (rows * grid_w * w.words_in * 4
-                * (VMEM_DOUBLE_BUFFER if double_buffer else 1))
+        vmem = stripe_vmem_bytes(
+            bh, m, grid_w, w.words_in, halo=w.halo,
+            double_buffer=double_buffer,
+        )
         feasible = vmem <= t.vmem_bytes
         if w.grid_w:
             # y-sharding needs d equal shards (same check as the scalar

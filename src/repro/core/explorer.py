@@ -403,9 +403,9 @@ class Explorer:
         ``d``-ring mesh (docs/pipeline.md §distribute); points needing
         more devices than the platform has (``max_devices``, default
         ``jax.device_count()``) are skipped. Custom back ends plug in
-        via ``run_factory(nsteps, m, block_h, d) -> nullary-callable |
-        None`` plus the concrete ``grid_shape=(h, w)``; returning
-        ``None`` skips the point. ``timer`` injects the timing
+        via ``run_factory(nsteps, m, block_h, d, double_buffer) ->
+        nullary-callable | None`` plus the concrete
+        ``grid_shape=(h, w)``; returning ``None`` skips the point. ``timer`` injects the timing
         primitive (tests drive whole strategies with a deterministic
         fake).
 
@@ -597,13 +597,14 @@ def render_executed(points: Sequence[ExecutedPoint]) -> str:
     timed the same plan).
     """
     head = (
-        "| block_h | m | d | steps | model GF/s | calib GF/s | measured GF/s "
-        "| MLUPS | rel err | src | mode |\n"
-        "|---------|---|---|-------|------------|------------|---------------"
-        "|-------|---------|-----|------|"
+        "| block_h | m | d | db | steps | model GF/s | calib GF/s "
+        "| measured GF/s | MLUPS | rel err | src | mode |\n"
+        "|---------|---|---|----|-------|------------|------------"
+        "|---------------|-------|---------|-----|------|"
     )
     rows = [
-        f"| {e.block_h} | {e.m} | {e.d} | {e.steps} | "
+        f"| {e.block_h} | {e.m} | {e.d} | "
+        f"{'pp' if e.double_buffer else '1b'} | {e.steps} | "
         f"{e.predicted_gflops:10.1f} | "
         + (f"{e.calibrated_gflops:10.4g}" if e.calibrated_gflops is not None
            else f"{'-':>10}")

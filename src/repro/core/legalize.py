@@ -23,6 +23,14 @@ is no "closest" shard count), and the (block_h, m) plan is then
 legalized against the shard height ``h / d``, with the same VMEM stripe
 accounting a single device uses (every shard keeps its own
 ``block_h + 2·m·halo``-row stripes resident).
+
+``double_buffer`` is a first-class plan dimension (docs/pipeline.md
+§stream): with it on, the streaming kernels ping/pong two stripe
+buffers so copy overlaps compute, and every stripe is accounted at
+``VMEM_DOUBLE_BUFFER`` times its size; with it off, one buffer streams
+sequentially and the whole budget holds a single stripe — the
+*streaming fallback* :func:`blocking_plan` drops to when no
+double-buffered stripe fits.
 """
 
 from __future__ import annotations
@@ -31,16 +39,23 @@ from __future__ import annotations
 #: truth for the DSE model (``TPUTarget.vmem_bytes``) and the legalizer.
 VMEM_BYTES = 128 * 1024 * 1024
 
-#: The pipelined kernels double-buffer the next block's DMA, so a stripe
-#: effectively occupies twice its size. Shared with ``TPUModel``.
+#: Ping/pong streaming keeps two stripes resident (one computing, one in
+#: DMA flight), so a double-buffered stripe occupies twice its size.
+#: Single source of truth: ``TPUModel`` and the legalizer both call
+#: :func:`stripe_vmem_bytes` rather than re-implementing this multiplier.
 VMEM_DOUBLE_BUFFER = 2
 
 
-def stripe_vmem_bytes(block_h: int, m: int, width: int, words: int,
-                      halo: int = 1,
-                      double_buffer: bool = True) -> int:
+def stripe_vmem_bytes(block_h, m, width: int, words: int,
+                      halo: int = 1, double_buffer: bool = True):
     """VMEM bytes of one (block_h + 2·m·halo)-row f32 stripe of ``words``
-    fields, matching the residency term of ``TPUModel.evaluate``."""
+    fields, matching the residency term of ``TPUModel.evaluate``.
+
+    ``double_buffer=True`` prices the ping/pong pair
+    (:data:`VMEM_DOUBLE_BUFFER` stripes resident); ``False`` prices the
+    single-buffer streaming fallback. ``block_h``/``m`` may be numpy
+    arrays (the model's batched lattice evaluation broadcasts through).
+    """
     rows = block_h + 2 * m * halo
     mult = VMEM_DOUBLE_BUFFER if double_buffer else 1
     return rows * max(width, 1) * max(words, 1) * 4 * mult
@@ -68,18 +83,19 @@ def shard_height(h: int, d: int) -> int:
 def legal_block_values(h: int, m: int, *, halo: int = 1,
                        width: int = 0, words: int = 0,
                        vmem_bytes: int = VMEM_BYTES,
-                       d: int = 1) -> tuple[int, ...]:
+                       d: int = 1,
+                       double_buffer: bool = True) -> tuple[int, ...]:
     """Every legal ``block_h`` for ``m`` fused steps on an ``h``-row grid.
 
     The ascending chain of shard-height divisors that can source the
     ``m·halo`` stencil halo and (when the stripe geometry is supplied)
     fit the shared VMEM budget — i.e. exactly the values
-    :func:`blocking_plan` chooses among. Search strategies
-    (``repro.core.search``, docs/pipeline.md §search) step block_h
-    through this chain directly, which is what makes the block height a
-    first-class searched dimension rather than a legalization byproduct;
-    an empty tuple means no block is legal for this ``m`` (the
-    neighborhood move is simply not available).
+    :func:`blocking_plan` chooses among for the same ``double_buffer``
+    setting. Search strategies (``repro.core.search``, docs/pipeline.md
+    §search) step block_h through this chain directly, which is what
+    makes the block height a first-class searched dimension rather than
+    a legalization byproduct; an empty tuple means no block is legal for
+    this ``m`` (the neighborhood move is simply not available).
     """
     if h < 1:
         raise ValueError(f"grid height must be positive, got {h}")
@@ -94,14 +110,16 @@ def legal_block_values(h: int, m: int, *, halo: int = 1,
     if width and words:
         legal = [
             v for v in legal
-            if stripe_vmem_bytes(v, m, width, words, halo) <= vmem_bytes
+            if stripe_vmem_bytes(v, m, width, words, halo,
+                                 double_buffer) <= vmem_bytes
         ]
     return tuple(legal)
 
 
 def blocking_plan(h: int, block_h: int, m: int, *, halo: int = 1,
                   width: int = 0, words: int = 0,
-                  vmem_bytes: int = VMEM_BYTES, d: int = 1) -> tuple[int, int]:
+                  vmem_bytes: int = VMEM_BYTES, d: int = 1,
+                  double_buffer: bool = True) -> tuple[int, int, bool]:
     """Legalize a model-chosen (block_h, m) for a grid of ``h`` rows.
 
     The temporal-blocking kernels require ``block_h | h`` and
@@ -109,9 +127,10 @@ def blocking_plan(h: int, block_h: int, m: int, *, halo: int = 1,
     stripe per side; ``halo`` is the per-step stencil reach inferred by
     ``repro.core.codegen``, 1 for the LBM kernel). The model's lattice is
     grid-agnostic, so its pick may violate either; this returns the
-    closest legal plan: the largest divisor of ``h`` that is <= the
-    requested block (or the smallest one >= m*halo when the request is
-    too small), with ``m`` clamped into [1, h].
+    closest legal plan ``(block_h, m, double_buffer)``: the largest
+    divisor of ``h`` that is <= the requested block (or the smallest one
+    >= m*halo when the request is too small), with ``m`` clamped into
+    [1, h].
 
     With ``d > 1`` the plan is legalized *per shard*: ``h`` must split
     into ``d`` equal shards (:func:`shard_height` raises otherwise) and
@@ -123,9 +142,13 @@ def blocking_plan(h: int, block_h: int, m: int, *, halo: int = 1,
     When ``width``/``words`` are supplied the plan is additionally kept
     under the shared VMEM budget (:data:`VMEM_BYTES`): only legal
     divisors whose stripe fits are considered — the same residency
-    arithmetic ``TPUModel`` uses for its feasibility mask — and a
-    ``ValueError`` is raised when none does (better than an opaque
-    on-device VMEM allocation failure).
+    arithmetic ``TPUModel`` uses for its feasibility mask. A
+    double-buffered request whose smallest ping/pong stripe pair
+    overflows the budget falls back to ``double_buffer=False`` (the
+    single-buffer streaming path, docs/pipeline.md §stream), whose
+    stripe budget is the whole VMEM; only when even that cannot fit is a
+    ``ValueError`` raised (better than an opaque on-device VMEM
+    allocation failure).
     """
     if h < 1:
         raise ValueError(f"grid height must be positive, got {h}")
@@ -145,33 +168,49 @@ def blocking_plan(h: int, block_h: int, m: int, *, halo: int = 1,
             f"h={local_h} rows (needs a block of >= {halo} rows dividing "
             f"it{f'; grid h={h} over d={d} shards' if d > 1 else ''})"
         )
+    double_buffer = bool(double_buffer)
     if width and words:
         fits = [
             v for v in legal
-            if stripe_vmem_bytes(v, m, width, words, halo) <= vmem_bytes
+            if stripe_vmem_bytes(v, m, width, words, halo,
+                                 double_buffer) <= vmem_bytes
         ]
+        if not fits and double_buffer:
+            # Streaming fallback: a single-buffered stripe has the whole
+            # budget to itself, so stripes up to VMEM_DOUBLE_BUFFER times
+            # larger still stream (sequentially) through VMEM.
+            double_buffer = False
+            fits = [
+                v for v in legal
+                if stripe_vmem_bytes(v, m, width, words, halo,
+                                     double_buffer) <= vmem_bytes
+            ]
         if not fits:  # no legal block fits: fail loudly, not on-device
             smallest = min(legal)
             raise ValueError(
-                f"no legal block for shard h={local_h} fits VMEM: smallest "
-                f"stripe (block_h={smallest}, m={m}, halo={halo}) needs "
-                f"{stripe_vmem_bytes(smallest, m, width, words, halo)} B "
-                f"> budget {vmem_bytes} B"
+                f"no legal block for shard h={local_h} fits VMEM even via "
+                f"the single-buffer streaming fallback "
+                f"(double_buffer=False): smallest stripe "
+                f"(block_h={smallest}, m={m}, halo={halo}) needs "
+                f"{stripe_vmem_bytes(smallest, m, width, words, halo, False)}"
+                f" B > budget {vmem_bytes} B"
             )
         legal = fits
     under = [v for v in legal if v <= block_h]
-    return (max(under) if under else min(legal)), m
+    return (max(under) if under else min(legal)), m, double_buffer
 
 
 def constraint_violation(h: int, block_h: int, m: int, *, halo: int = 1,
                          width: int = 0, words: int = 0,
-                         vmem_bytes: int = VMEM_BYTES, d: int = 1) -> float:
+                         vmem_bytes: int = VMEM_BYTES, d: int = 1,
+                         double_buffer: bool = True) -> float:
     """Continuous distance-to-feasibility of a (block_h, m, d) request.
 
     Exactly ``0.0`` iff :func:`blocking_plan` would produce a legal plan
-    for the same arguments; positive otherwise, and **monotone in the
-    VMEM overshoot** — the deeper the smallest legal stripe overflows
-    the budget, the larger the distance. Surrogate search strategies
+    for the same arguments (including via the single-buffer streaming
+    fallback); positive otherwise, and **monotone in the VMEM
+    overshoot** — the deeper the smallest legal stripe overflows the
+    budget, the larger the distance. Surrogate search strategies
     (docs/pipeline.md §study) use this as a penalty signal instead of
     hard-rejecting infeasible candidates: a continuous violation gives
     the sampler a gradient toward the feasible region, where a boolean
@@ -181,8 +220,9 @@ def constraint_violation(h: int, block_h: int, m: int, *, halo: int = 1,
     The three failure modes, by increasing distance-from-legal:
 
     * **VMEM overflow** — every legal divisor's stripe exceeds the
-      budget: violation is the fractional overshoot of the *smallest*
-      legal stripe, ``(bytes - vmem_bytes) / vmem_bytes``;
+      budget even single-buffered: violation is the fractional overshoot
+      of the *smallest* legal single-buffered stripe,
+      ``(bytes - vmem_bytes) / vmem_bytes``;
     * **unsourceable halo** — the per-step stencil reach exceeds the
       shard height: ``1 +`` the fractional excess (strictly above every
       VMEM violation of the same order);
@@ -205,7 +245,9 @@ def constraint_violation(h: int, block_h: int, m: int, *, halo: int = 1,
     if not (width and words):
         return 0.0
     # Mirror blocking_plan's m-shrink loop, then price the smallest
-    # legal stripe against the budget.
+    # legal stripe against the budget. blocking_plan falls back to
+    # double_buffer=False before erroring, so a request is only
+    # infeasible when even the single-buffered stripe overflows.
     divisors = [v for v in range(1, local_h + 1) if local_h % v == 0]
     floor = max(1, m * halo)
     legal = [v for v in divisors if v >= floor]
@@ -213,29 +255,48 @@ def constraint_violation(h: int, block_h: int, m: int, *, halo: int = 1,
         m -= 1
         floor = max(1, m * halo)
         legal = [v for v in divisors if v >= floor]
-    need = min(stripe_vmem_bytes(v, m, width, words, halo) for v in legal)
+    need = min(
+        stripe_vmem_bytes(v, m, width, words, halo, double_buffer)
+        for v in legal
+    )
     if need <= vmem_bytes:
         return 0.0
+    if double_buffer:
+        need = min(
+            stripe_vmem_bytes(v, m, width, words, halo, False)
+            for v in legal
+        )
+        if need <= vmem_bytes:
+            return 0.0
     return (need - vmem_bytes) / vmem_bytes
 
 
-def resolve_run_plan(h: int, point, steps: int | None = None, *,
-                     halo: int = 1, width: int = 0,
-                     words: int = 0, d: int = 1) -> tuple[int, int, int]:
-    """Turn a DSE design point into a concrete (block_h, m, steps) plan.
+def resolve_run_plan(
+    h: int, point, steps: int | None = None, *, halo: int = 1,
+    width: int = 0, words: int = 0, d: int = 1,
+    vmem_bytes: int = VMEM_BYTES,
+) -> tuple[int, int, int, bool]:
+    """Turn a DSE design point into a concrete
+    (block_h, m, steps, double_buffer) plan.
 
     ``point`` is any object with ``m`` and ``detail['block_rows']`` (a
-    :class:`repro.core.dse.DesignPoint` from a TPU sweep). The blocking is
-    legalized with :func:`blocking_plan` — per shard when ``d > 1``;
-    ``steps`` defaults to one fused launch (m steps) and is rounded down
-    to a multiple of m.
+    :class:`repro.core.dse.DesignPoint` from a TPU sweep); a
+    ``detail['double_buffer']`` entry requests the buffer protocol
+    (default ping/pong). The blocking is legalized with
+    :func:`blocking_plan` — per shard when ``d > 1``, with the
+    double-buffered→single-buffered streaming fallback applied; ``steps``
+    defaults to one fused launch (m steps) and is rounded down to a
+    multiple of m.
     """
-    block_h, m = blocking_plan(
+    detail = getattr(point, "detail", None) or {}
+    requested_db = bool(detail.get("double_buffer", True))
+    block_h, m, double_buffer = blocking_plan(
         h, int(point.detail["block_rows"]), int(point.m),
-        halo=halo, width=width, words=words, d=d,
+        halo=halo, width=width, words=words, d=d, vmem_bytes=vmem_bytes,
+        double_buffer=requested_db,
     )
     nsteps = m if steps is None else max(m, (steps // m) * m)
-    return block_h, m, nsteps
+    return block_h, m, nsteps, double_buffer
 
 
 __all__ = [

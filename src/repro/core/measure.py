@@ -251,6 +251,7 @@ _SALT_MODULES = (
     "repro.core.distribute",
     "repro.kernels.spd_stream.spd_stream",
     "repro.kernels.spd_stream.sharded",
+    "repro.kernels.spd_stream.streaming",
     "repro.kernels.spd_stream.ops",
     "repro.kernels.lbm_stream.lbm_stream",
     "repro.kernels.lbm_stream.ops",
@@ -288,7 +289,8 @@ class MeasurementCache:
     """On-disk store of timed measurements, keyed by what determines them.
 
     A key is the SHA-256 of (core fingerprint, grid shape, run plan
-    ``(block_h, m, steps, d)``, backend, interpret, reps, warmup) plus
+    ``(block_h, m, steps, d, double_buffer)``, backend, interpret, reps,
+    warmup) plus
     the :func:`code_salt` — the jax version and the kernel
     implementation sources — so neither a changed core *nor* a changed
     kernel/runtime can ever serve a stale timing (see :meth:`make_key`).
@@ -322,7 +324,7 @@ class MeasurementCache:
         fields = {
             "fingerprint": fingerprint,
             "grid_shape": [int(v) for v in grid_shape],
-            "plan": [int(v) for v in plan],  # (block_h, m, steps, d)
+            "plan": [int(v) for v in plan],  # (block_h, m, steps, d[, db])
             "backend": backend,
             "interpret": bool(interpret),
             "reps": int(reps),
@@ -552,7 +554,7 @@ def measure_elementwise_gflops(
     h, w = shape
     kern = Registry().compile(parse_spd(_fma_chain_spd(chain))).stream_kernel()
     state = jnp.full((1, h, w), 0.5, jnp.float32)
-    bh, mm = blocking_plan(h, block_h, m, halo=kern.halo, width=w, words=1)
+    bh, mm, _ = blocking_plan(h, block_h, m, halo=kern.halo, width=w, words=1)
     timing = time_run(
         lambda: kern.run_blocked(
             state, (0.997,), steps=mm, m=mm, block_h=bh, interpret=interpret
@@ -706,19 +708,22 @@ def calibrate_execution(
         plans = []
         for req_bh, req_m in probe_plans:
             try:
-                bh, m = blocking_plan(
+                bh, m, db = blocking_plan(
                     h, req_bh, req_m, halo=halo, width=width, words=words,
                     d=d,
                 )
             except ValueError:
                 continue  # this anchor has no legal plan here (e.g. a
                 #           VMEM-tight grid); the others still calibrate
-            if (bh, m) not in plans:
-                plans.append((bh, m))
+            if (bh, m, db) not in plans:
+                plans.append((bh, m, db))
         rates = []
-        for bh, m in plans:
+        for bh, m, db in plans:
             nsteps = m
-            run = run_factory(nsteps, m, bh, d)
+            try:
+                run = run_factory(nsteps, m, bh, d, db)
+            except TypeError:  # legacy 4-arg factories predate the knob
+                run = run_factory(nsteps, m, bh, d)
             if run is None:
                 continue
             # Same key space as frontier runs: (fingerprint, grid,
@@ -728,7 +733,7 @@ def calibrate_execution(
             key = None
             if cache is not None and fingerprint is not None:
                 key = MeasurementCache.make_key(
-                    fingerprint, (h, w), (bh, m, nsteps, d),
+                    fingerprint, (h, w), (bh, m, nsteps, d, int(db)),
                     backend, interpret, reps, warmup,
                 )
             wall, _ = measured_run(

@@ -68,7 +68,10 @@ class RunPlan:
 
     The identity the runner dedupes and budgets on — ``reps`` is part of
     it because a low-rep screening pass and a full-rep final are
-    different measurements (successive halving relies on that).
+    different measurements (successive halving relies on that), and
+    ``double_buffer`` is part of it because the ping/pong and
+    single-buffer streamed kernels are different code
+    (docs/pipeline.md §stream).
     """
 
     block_h: int
@@ -76,9 +79,11 @@ class RunPlan:
     steps: int
     d: int
     reps: int
+    double_buffer: bool = True
 
     def key(self) -> tuple:
-        return (self.block_h, self.m, self.steps, self.d, self.reps)
+        return (self.block_h, self.m, self.steps, self.d, self.reps,
+                bool(self.double_buffer))
 
     def as_dict(self) -> dict:
         return {
@@ -87,6 +92,7 @@ class RunPlan:
             "steps": int(self.steps),
             "d": int(self.d),
             "reps": int(self.reps),
+            "double_buffer": bool(self.double_buffer),
         }
 
 
@@ -100,6 +106,7 @@ EXECUTED_POINT_FIELDS = (
     "block_h",
     "m",
     "d",
+    "double_buffer",
     "steps",
     "wall_s",
     "measured_mlups",
@@ -137,6 +144,7 @@ class ExecutedPoint:
     cached: bool = False  # wall time came from the measurement cache (or
     #                       this search already timed the same plan)
     reps: int = 1
+    double_buffer: bool = True  # streamed buffer protocol actually run
 
     def as_dict(self) -> dict:
         """JSON-ready record — the one serialization shared by the CLI's
@@ -147,6 +155,7 @@ class ExecutedPoint:
             "block_h": int(self.block_h),
             "m": int(self.m),
             "d": int(self.d),
+            "double_buffer": bool(self.double_buffer),
             "steps": int(self.steps),
             "wall_s": float(self.wall_s),
             "measured_mlups": float(self.measured_mlups),
@@ -167,21 +176,24 @@ class ExecutedPoint:
 def kernel_run_factory(kern, state, regs: Sequence, interpret: bool):
     """The default back end: a codegen'd StreamKernel, sharded for d>1.
 
-    Returns the ``run_factory(nsteps, m, block_h, d)`` the runner calls;
-    ``d > 1`` plans go through ``kern.sharded(d)`` (cached per d on the
-    kernel, docs/pipeline.md §distribute).
+    Returns the ``run_factory(nsteps, m, block_h, d, double_buffer)``
+    the runner calls; ``d > 1`` plans go through ``kern.sharded(d)``
+    (cached per d on the kernel, docs/pipeline.md §distribute), and
+    ``double_buffer`` selects the streamed launch's buffer protocol
+    (docs/pipeline.md §stream).
     """
 
-    def run_factory(nsteps: int, m: int, block_h: int, d: int):
+    def run_factory(nsteps: int, m: int, block_h: int, d: int,
+                    double_buffer: bool = True):
         if d == 1:
             return lambda: kern.run_blocked(
                 state, regs, steps=nsteps, m=m, block_h=block_h,
-                interpret=interpret,
+                double_buffer=double_buffer, interpret=interpret,
             )
         runner = kern.sharded(d)  # cached per d on the kernel
         return lambda: runner.run_blocked(
             state, regs, steps=nsteps, m=m, block_h=block_h,
-            interpret=interpret,
+            double_buffer=double_buffer, interpret=interpret,
         )
 
     return run_factory
@@ -277,19 +289,24 @@ class SearchRunner:
 
     # ---- model-side helpers ------------------------------------------------
 
-    def point(self, block_h: int, m: int, d: int = 1) -> DesignPoint | None:
+    def point(self, block_h: int, m: int, d: int = 1,
+              double_buffer: bool | None = None) -> DesignPoint | None:
         """Materialize a lattice coordinate through the scalar model.
 
         Strategies use this to price neighborhood moves (LocalRefine's
-        (block_h, m, d) steps) before spending budget on them. ``None``
-        when the runner was built without a model (custom back ends that
-        only replay frontier points).
+        (block_h, m, d, double_buffer) steps) before spending budget on
+        them. ``double_buffer=None`` inherits the sweep's setting (the
+        runner's ``scalar_kwargs``). ``None`` when the runner was built
+        without a model (custom back ends that only replay frontier
+        points).
         """
         if self.model is None:
             return None
+        kwargs = dict(self.scalar_kwargs)
+        if double_buffer is not None:
+            kwargs["double_buffer"] = bool(double_buffer)
         return self.model.evaluate(
-            self.workload, int(block_h), int(m), d=int(d),
-            **self.scalar_kwargs,
+            self.workload, int(block_h), int(m), d=int(d), **kwargs,
         )
 
     def plan_for(self, point, *, reps: int | None = None) -> RunPlan | None:
@@ -303,14 +320,15 @@ class SearchRunner:
         if d > self.max_devices:
             return None
         try:
-            block_h, m, nsteps = resolve_run_plan(
+            block_h, m, nsteps, double_buffer = resolve_run_plan(
                 self.h, point, self.steps, halo=self.halo,
                 width=self.width, words=self.words, d=d,
             )
         except ValueError:
             return None
         return RunPlan(block_h, m, nsteps, d,
-                       self.reps if reps is None else int(reps))
+                       self.reps if reps is None else int(reps),
+                       double_buffer)
 
     # ---- cache / study key space -------------------------------------------
 
@@ -343,7 +361,8 @@ class SearchRunner:
             return None
         return measure.MeasurementCache.make_key(
             fp, (self.h, self.w),
-            (plan.block_h, plan.m, plan.steps, plan.d),
+            (plan.block_h, plan.m, plan.steps, plan.d,
+             int(plan.double_buffer)),
             self.backend, self.interpret, plan.reps, self.warmup,
         )
 
@@ -404,19 +423,22 @@ class SearchRunner:
             return None
         reps = self.reps if reps is None else int(reps)
         try:
-            block_h, m, nsteps = resolve_run_plan(
+            block_h, m, nsteps, double_buffer = resolve_run_plan(
                 self.h, point, self.steps, halo=self.halo,
                 width=self.width, words=self.words, d=d,
             )
         except ValueError:
             self.skipped_illegal += 1
             return None
-        plan = RunPlan(block_h, m, nsteps, d, reps)
+        plan = RunPlan(block_h, m, nsteps, d, reps, double_buffer)
 
         cached = True
         wall = self._walls.get(plan.key())  # in-run dedupe, cache-independent
         if wall is None:
-            run = self.run_factory(nsteps, m, block_h, d)
+            try:
+                run = self.run_factory(nsteps, m, block_h, d, double_buffer)
+            except TypeError:  # legacy 4-arg factories predate the knob
+                run = self.run_factory(nsteps, m, block_h, d)
             if run is None:
                 return None  # this back end cannot execute the point
             key = None
@@ -450,7 +472,7 @@ class SearchRunner:
             # Predict the geometry actually run (legalized plan, not the
             # raw lattice pick) under the measured platform constants.
             calibrated = self._calibrated_model(d, (block_h, m)).evaluate(
-                self.workload, block_h, m, d=d,
+                self.workload, block_h, m, d=d, double_buffer=double_buffer,
             ).sustained_gflops
         headline = calibrated if calibrated is not None else predicted
         executed = ExecutedPoint(
@@ -471,6 +493,7 @@ class SearchRunner:
             ),
             cached=cached,
             reps=reps,
+            double_buffer=double_buffer,
         )
         if self.study is not None:
             self.study.record_trial(self, executed, **self.study_meta)

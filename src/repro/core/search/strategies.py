@@ -89,7 +89,8 @@ def _ranked_candidates(sweep, runner: SearchRunner) -> list:
         plan = runner.plan_for(pt)
         if plan is None:
             continue
-        dedup = (plan.block_h, plan.m, plan.steps, plan.d)
+        dedup = (plan.block_h, plan.m, plan.steps, plan.d,
+                 plan.double_buffer)
         if dedup in seen:
             continue
         seen.add(dedup)
@@ -140,9 +141,10 @@ class LocalRefine:
     frontier points are measured, then the best measured point's
     one-coordinate moves — block_h to the adjacent legal divisors
     (first-class, not just whatever legalization returned), m and d
-    halved/doubled — are measured, moving whenever a neighbor beats the
-    incumbent, until a round yields no improvement, ``max_rounds`` is
-    hit, or the budget runs out.
+    halved/doubled, double_buffer flipped (ping/pong vs single-buffer
+    streaming, docs/pipeline.md §stream) — are measured, moving
+    whenever a neighbor beats the incumbent, until a round yields no
+    improvement, ``max_rounds`` is hit, or the budget runs out.
     """
 
     name = "refine"
@@ -158,7 +160,7 @@ class LocalRefine:
             e = runner.measure(pt)
             if e is None:
                 return None
-            plan = (e.block_h, e.m, e.steps, e.d)
+            plan = (e.block_h, e.m, e.steps, e.d, e.double_buffer)
             if plan not in seen:
                 seen.add(plan)
                 out.append(e)
@@ -175,8 +177,8 @@ class LocalRefine:
                 return out
             for _ in range(self.max_rounds):
                 improved = False
-                for nb, nm, nd in self._neighborhood(best, runner):
-                    pt = runner.point(nb, nm, nd)
+                for nb, nm, nd, ndb in self._neighborhood(best, runner):
+                    pt = runner.point(nb, nm, nd, double_buffer=ndb)
                     if pt is None or not pt.feasible:
                         continue
                     e = visit(pt)
@@ -194,29 +196,32 @@ class LocalRefine:
     @staticmethod
     def _neighborhood(best: ExecutedPoint, runner: SearchRunner):
         """One-coordinate moves from the incumbent's *legalized* plan."""
-        bh, m, d = best.block_h, best.m, best.d
-        moves: list[tuple[int, int, int]] = []
-        # block_h: the adjacent legal divisors for this (m, d) — the
+        bh, m, d, db = best.block_h, best.m, best.d, best.double_buffer
+        moves: list[tuple[int, int, int, bool]] = []
+        # block_h: the adjacent legal divisors for this (m, d, db) — the
         # chain blocking_plan chooses among, searched directly.
         chain = legal_block_values(
             runner.h, m, halo=runner.halo, width=runner.width,
-            words=runner.words, d=d,
+            words=runner.words, d=d, double_buffer=db,
         )
         below = [v for v in chain if v < bh]
         above = [v for v in chain if v > bh]
         if below:
-            moves.append((below[-1], m, d))
+            moves.append((below[-1], m, d, db))
         if above:
-            moves.append((above[0], m, d))
+            moves.append((above[0], m, d, db))
         # m: halve / double the fused-step count.
         if m > 1:
-            moves.append((bh, max(1, m // 2), d))
-        moves.append((bh, m * 2, d))
+            moves.append((bh, max(1, m // 2), d, db))
+        moves.append((bh, m * 2, d, db))
         # d: halve / double the device axis within the platform.
         if d > 1:
-            moves.append((bh, m, d // 2))
+            moves.append((bh, m, d // 2, db))
         if 2 * d <= runner.max_devices and runner.h % (2 * d) == 0:
-            moves.append((bh, m, 2 * d))
+            moves.append((bh, m, 2 * d, db))
+        # double_buffer: flip the streamed launch's buffer protocol
+        # (ping/pong overlap vs the single-buffer streaming fallback).
+        moves.append((bh, m, d, not db))
         return moves
 
 

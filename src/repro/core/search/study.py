@@ -165,6 +165,10 @@ class Study:
                 "trial",
                 point.get("block_h"), point.get("m"),
                 point.get("steps"), point.get("d"), point.get("reps"),
+                # Older journals predate the double_buffer plan dimension
+                # (docs/pipeline.md §stream); they recorded the
+                # then-default ping/pong protocol.
+                bool(point.get("double_buffer", True)),
             )
         coords = rec.get("coords")
         if coords is not None:
@@ -195,7 +199,8 @@ class Study:
 
         point = executed.as_dict()
         plan = RunPlan(point["block_h"], point["m"], point["steps"],
-                       point["d"], point["reps"])
+                       point["d"], point["reps"],
+                       bool(point.get("double_buffer", True)))
         rec = {
             "v": self.VERSION,
             "study": self.name,
@@ -270,7 +275,8 @@ class Study:
         for rec in self.trials_for(runner):
             p = rec["point"]
             plan = RunPlan(int(p["block_h"]), int(p["m"]), int(p["steps"]),
-                           int(p["d"]), int(p["reps"]))
+                           int(p["d"]), int(p["reps"]),
+                           bool(p.get("double_buffer", True)))
             if plan.key() not in runner._walls:
                 runner._walls[plan.key()] = float(p["wall_s"])
                 n += 1

@@ -110,38 +110,47 @@ class TPESearch:
                 runner.skipped_devices += 1
                 continue
             pt = sweep.point(i)
+            req_db = bool(
+                (getattr(pt, "detail", None) or {}).get("double_buffer", True)
+            )
             plan = runner.plan_for(pt)
             if plan is None:
                 viol = constraint_violation(
                     runner.h, bh, m, halo=runner.halo, width=runner.width,
-                    words=runner.words, d=d,
+                    words=runner.words, d=d, double_buffer=req_db,
                 )
                 out.append(_Candidate(
-                    point=pt, coords=coords, x=self._features(bh, m, d),
+                    point=pt, coords=coords,
+                    x=self._features(bh, m, d, req_db),
                     plan=None, violation=max(viol, 1e-9),
                     model_gflops=float(gflops[i]),
                 ))
                 continue
-            pkey = (plan.block_h, plan.m, plan.steps, plan.d)
+            pkey = (plan.block_h, plan.m, plan.steps, plan.d,
+                    plan.double_buffer)
             if pkey in seen_plans:
                 continue  # same concrete plan: model-best spelling wins
             seen_plans.add(pkey)
             out.append(_Candidate(
                 point=pt,
                 coords=(plan.block_h, plan.m, plan.d),
-                x=self._features(plan.block_h, plan.m, plan.d),
+                x=self._features(plan.block_h, plan.m, plan.d,
+                                 plan.double_buffer),
                 plan=plan, violation=0.0,
                 model_gflops=float(gflops[i]),
             ))
         return out
 
     @staticmethod
-    def _features(bh: int, m: int, d: int) -> np.ndarray:
-        """Log2 lattice coordinates: the natural metric of a power-of-two
-        sweep (one halving/doubling = one unit in every dimension)."""
+    def _features(bh: int, m: int, d: int,
+                  double_buffer: bool = True) -> np.ndarray:
+        """Log2 lattice coordinates plus the binary buffer-protocol axis:
+        the natural metric of a power-of-two sweep (one halving/doubling
+        = one unit in every dimension; a double_buffer flip likewise,
+        docs/pipeline.md §stream)."""
         return np.array(
             [math.log2(max(1, bh)), math.log2(max(1, m)),
-             math.log2(max(1, d))], float,
+             math.log2(max(1, d)), float(bool(double_buffer))], float,
         )
 
     # ---- density model -----------------------------------------------------

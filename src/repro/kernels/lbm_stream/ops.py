@@ -28,7 +28,10 @@ def lbm_run_for_point(f, attr, one_tau, point, *, steps: int | None = None,
     applies exactly as it does on the generic codegen path.
     Returns ``(result, (block_h, m))``.
     """
-    block_h, m, nsteps = resolve_run_plan(
+    # The hand-written LBM kernel predates the streamed path and ignores
+    # the resolved double_buffer protocol (it always uses the BlockSpec
+    # pipeline); the generic codegen path is the streamed one.
+    block_h, m, nsteps, _ = resolve_run_plan(
         f.shape[1], point, steps, width=f.shape[2], words=f.shape[0] + 1,
     )
     out = lbm_run_blocked(f, attr, one_tau, u_lid, steps=nsteps, m=m,

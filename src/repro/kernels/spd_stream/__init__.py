@@ -7,9 +7,22 @@ lowers any compiled SPD core into the stripe-update function that
 :func:`spd_multistep_halo` is the per-shard variant of the same launch
 for multi-device runs, with the y-halo pre-exchanged by
 ``repro.core.distribute`` (docs/pipeline.md §distribute).
+
+:func:`spd_multistep_streamed` / :func:`spd_multistep_halo_streamed` are
+the manually pipelined twins of those two launches: the state stays in
+HBM and stripes are staged through ping/pong VMEM buffers by explicit
+async copies, making the ``double_buffer`` plan knob real
+(docs/pipeline.md §stream).
 """
 
 from .ops import spd_multistep, stream_run_blocked
 from .sharded import spd_multistep_halo
+from .streaming import spd_multistep_halo_streamed, spd_multistep_streamed
 
-__all__ = ["spd_multistep", "spd_multistep_halo", "stream_run_blocked"]
+__all__ = [
+    "spd_multistep",
+    "spd_multistep_halo",
+    "spd_multistep_halo_streamed",
+    "spd_multistep_streamed",
+    "stream_run_blocked",
+]

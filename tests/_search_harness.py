@@ -78,7 +78,8 @@ class ModelTimer:
     def __call__(self, plan, run, reps, warmup):
         self.calls.append(plan)
         pred = self.model.evaluate(
-            self.workload, plan.block_h, plan.m, d=plan.d
+            self.workload, plan.block_h, plan.m, d=plan.d,
+            double_buffer=plan.double_buffer,
         ).sustained_gflops
         sites = self.h * self.w * plan.steps
         wall = sites * self.workload.flops_per_elem / (pred * 1e9)
@@ -86,7 +87,7 @@ class ModelTimer:
         return wall / self.boost.get((plan.block_h, plan.m, plan.d), 1.0)
 
 
-def _rf(nsteps, m, block_h, d):
+def _rf(nsteps, m, block_h, d, double_buffer=True):
     return lambda: None  # never called: the fake timer ignores `run`
 
 

@@ -330,7 +330,7 @@ def test_second_app_sweeps_and_executes_frontier():
         assert r.wall_s > 0 and np.isfinite(r.rel_error)
         assert r.predicted_gflops == pytest.approx(r.point.sustained_gflops)
     # ... and the executed state is the right physics, not just timed.
-    out, (bh, m) = sim.kernel.run_for_point(
+    out, (bh, m, _) = sim.kernel.run_for_point(
         state, (0.2,), point=frontier[0], interpret=True
     )
     want = dif.diffusion_ref_run(u0, 0.2, m)
@@ -344,12 +344,12 @@ def test_second_app_sweeps_and_executes_frontier():
 
 def test_blocking_plan_halo_aware():
     # halo=2 doubles the per-step row consumption: m=4 needs block >= 8.
-    assert blocking_plan(64, 64, 4, halo=2) == (64, 4)
-    assert blocking_plan(64, 4, 4, halo=2) == (8, 4)  # forced up to m*halo
+    assert blocking_plan(64, 64, 4, halo=2) == (64, 4, True)
+    assert blocking_plan(64, 4, 4, halo=2) == (8, 4, True)  # up to m*halo
     # halo=0 (elementwise core): any divisor works.
-    assert blocking_plan(64, 7, 64, halo=0) == (4, 64)
+    assert blocking_plan(64, 7, 64, halo=0) == (4, 64, True)
     # m*halo larger than the whole grid: m shrinks until sourceable...
-    bh, m = blocking_plan(8, 8, 8, halo=4)
+    bh, m, _ = blocking_plan(8, 8, 8, halo=4)
     assert m >= 1 and m * 4 <= bh <= 8
     # ...but never below one step: an unsourceable halo is an error,
     # not a silent (bh, 0) plan.
@@ -370,9 +370,11 @@ def test_model_and_legalizer_agree_on_stripe_geometry():
             512, 8, 1440, 10, halo=halo
         )
         if pt.feasible:
-            bh, m = blocking_plan(4096, 512, 8, halo=halo,
-                                  width=1440, words=10)
-            assert (bh, m) == (512, 8), f"feasible point shrunk at halo={halo}"
+            bh, m, db = blocking_plan(4096, 512, 8, halo=halo,
+                                      width=1440, words=10)
+            assert (bh, m, db) == (512, 8, True), (
+                f"feasible point shrunk at halo={halo}"
+            )
 
 
 def test_report_halo_propagates_to_workload():
@@ -408,15 +410,17 @@ def test_blocking_plan_vmem_clamp():
     # A stripe of 10 f32 words x 720 columns: huge blocks blow VMEM, so
     # the legalizer must come down to a divisor whose stripe fits.
     h, width, words = 4096, 720, 10
-    bh, m = blocking_plan(h, 4096, 4, width=width, words=words)
-    assert stripe_vmem_bytes(bh, m, width, words) <= VMEM_BYTES
+    bh, m, db = blocking_plan(h, 4096, 4, width=width, words=words)
+    assert stripe_vmem_bytes(bh, m, width, words,
+                             double_buffer=db) <= VMEM_BYTES
     assert h % bh == 0
     # Without the clamp the request would have been honored.
-    assert blocking_plan(h, 4096, 4) == (4096, 4)
-    # When no legal block fits the budget, fail loudly rather than hand
-    # back a plan that dies with an on-device allocation error.
+    assert blocking_plan(h, 4096, 4) == (4096, 4, True)
+    # When no legal block fits the budget — not even the single-buffer
+    # streaming fallback — fail loudly rather than hand back a plan
+    # that dies with an on-device allocation error.
     with pytest.raises(ValueError, match="VMEM"):
-        blocking_plan(251, 251, 1, width=100_000, words=100)
+        blocking_plan(251, 251, 1, width=100_000, words=200)
 
 
 def test_resolve_run_plan_threads_halo():
@@ -424,9 +428,9 @@ def test_resolve_run_plan_threads_halo():
 
     w = StreamWorkload("t", 7, 1, 1, 100, 1000, 32 * 64, grid_w=64)
     pt = TPUModel().evaluate(w, bh=16, m=8)
-    block_h, m, nsteps = resolve_run_plan(32, pt, halo=2)
+    block_h, m, nsteps, db = resolve_run_plan(32, pt, halo=2)
     assert 32 % block_h == 0 and m * 2 <= block_h
-    assert nsteps == m
+    assert nsteps == m and db is True
 
 
 @given(
@@ -446,8 +450,8 @@ def test_prop_blocking_plan_never_exceeds_vmem(h, block_h, m, halo,
     from repro.core.legalize import constraint_violation
 
     try:
-        bh, mm = blocking_plan(h, block_h, m, halo=halo, width=width,
-                               words=words)
+        bh, mm, db = blocking_plan(h, block_h, m, halo=halo, width=width,
+                                   words=words)
     except ValueError:
         # infeasible request: the continuous distance must agree
         assert constraint_violation(
@@ -455,4 +459,4 @@ def test_prop_blocking_plan_never_exceeds_vmem(h, block_h, m, halo,
         ) > 0.0
         return
     assert h % bh == 0
-    assert stripe_vmem_bytes(bh, mm, width, words, halo) <= VMEM_BYTES
+    assert stripe_vmem_bytes(bh, mm, width, words, halo, db) <= VMEM_BYTES

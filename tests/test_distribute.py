@@ -72,13 +72,13 @@ def test_shard_height_and_indivisible_error():
 
 def test_blocking_plan_is_per_shard():
     # d=4 shards of 16 rows: the block must divide the *shard*, not the grid.
-    assert blocking_plan(64, 64, 2, d=4) == (16, 2)
-    assert blocking_plan(64, 12, 2, d=4) == (8, 2)  # divisor of 16, not 12
+    assert blocking_plan(64, 64, 2, d=4) == (16, 2, True)
+    assert blocking_plan(64, 12, 2, d=4) == (8, 2, True)  # divisor of 16
     # halo floor applies within the shard: m*halo <= block_h <= h/d.
-    bh, m = blocking_plan(64, 4, 8, halo=2, d=4)
+    bh, m, _ = blocking_plan(64, 4, 8, halo=2, d=4)
     assert bh <= 16 and 16 % bh == 0 and m * 2 <= bh
     # d=1 keeps the exact single-device behavior.
-    assert blocking_plan(64, 24, 4) == (16, 4)
+    assert blocking_plan(64, 24, 4) == (16, 4, True)
 
 
 def test_blocking_plan_indivisible_height_is_an_error():
@@ -90,19 +90,21 @@ def test_blocking_plan_vmem_clamp_is_per_shard():
     # A stripe that fits the shard but would not have fit the full grid
     # is irrelevant — VMEM is per chip, accounted against h/d divisors.
     h, width, words = 4096, 720, 10
-    bh, m = blocking_plan(h, 4096, 4, width=width, words=words, d=4)
+    bh, m, db = blocking_plan(h, 4096, 4, width=width, words=words, d=4)
     assert 1024 % bh == 0  # a divisor of the shard height
-    assert stripe_vmem_bytes(bh, m, width, words) <= 128 * 1024 * 1024
-    # An over-budget smallest stripe still fails loudly per shard.
+    assert stripe_vmem_bytes(bh, m, width, words,
+                             double_buffer=db) <= 128 * 1024 * 1024
+    # An over-budget smallest stripe still fails loudly per shard —
+    # even the single-buffer streaming fallback cannot fit this one.
     with pytest.raises(ValueError, match="VMEM"):
-        blocking_plan(502, 251, 1, width=100_000, words=100, d=2)
+        blocking_plan(502, 251, 1, width=100_000, words=200, d=2)
 
 
 def test_resolve_run_plan_threads_d():
     w = StreamWorkload("t", 7, 1, 1, 100, 1000, 64 * 64, grid_w=64)
     pt = TPUModel().evaluate(w, bh=64, m=2, d=4)
-    block_h, m, nsteps = resolve_run_plan(64, pt, d=4)
-    assert 16 % block_h == 0 and m == 2 and nsteps == m
+    block_h, m, nsteps, db = resolve_run_plan(64, pt, d=4)
+    assert 16 % block_h == 0 and m == 2 and nsteps == m and db is True
 
 
 def test_device_axis_values():
@@ -236,6 +238,62 @@ def test_lbm_sharded_bitmatch_walls(lbm_sim):
     np.testing.assert_array_equal(np.asarray(shard), np.asarray(single))
 
 
+# ----------------------- overlapped halo exchange ---------------------------
+
+
+@_needs_devices(2)
+@pytest.mark.parametrize("m", [1, 2])
+def test_overlapped_exchange_bitmatch_diffusion(dif_sim, m):
+    """ISSUE 7 satellite: overlapping the ppermute halo exchange with
+    interior compute (docs/pipeline.md §overlap) is a scheduling choice,
+    not a numerics choice — overlapped ≡ non-overlapped ≡ single-device,
+    bit for bit. block_h=2 gives each 8-row shard nblk=4 ≥ 3, so the
+    interior/edge decomposition actually engages."""
+    u0, _ = dif.sine_init(16, 64)
+    state = dif_sim.state(u0)
+    kern = dif_sim.kernel
+    single = kern.run_blocked(state, (0.2,), steps=2 * m, m=m, block_h=2)
+    sk = kern.sharded(2)
+    on = sk.run_blocked(state, (0.2,), steps=2 * m, m=m, block_h=2,
+                        overlap=True)
+    off = sk.run_blocked(state, (0.2,), steps=2 * m, m=m, block_h=2,
+                         overlap=False)
+    np.testing.assert_array_equal(np.asarray(on), np.asarray(off))
+    np.testing.assert_array_equal(np.asarray(on), np.asarray(single))
+
+
+@_needs_devices(2)
+def test_overlapped_exchange_bitmatch_lbm(lbm_sim):
+    """Same contract on the codegen'd uLBM core (nine crossing
+    stencils), in both buffer protocols."""
+    kern = lbm_sim.stream_kernel()
+    f, attr, _ = lbm.taylor_green_init(16, 64)
+    state = lbm_sim.stream_state(f, attr)
+    single = kern.run_blocked(state, LBM_REGS, steps=2, m=1, block_h=2)
+    sk = kern.sharded(2)
+    for db in (True, False):
+        on = sk.run_blocked(state, LBM_REGS, steps=2, m=1, block_h=2,
+                            overlap=True, double_buffer=db)
+        off = sk.run_blocked(state, LBM_REGS, steps=2, m=1, block_h=2,
+                             overlap=False, double_buffer=db)
+        np.testing.assert_array_equal(np.asarray(on), np.asarray(off))
+        np.testing.assert_array_equal(np.asarray(on), np.asarray(single))
+
+
+@_needs_devices(2)
+def test_overlap_falls_back_below_three_blocks(dif_sim):
+    """nblk < 3 leaves no exchange-free interior: the overlapped path
+    must quietly use the monolithic launch and still match."""
+    u0, _ = dif.sine_init(16, 64)
+    state = dif_sim.state(u0)
+    kern = dif_sim.kernel
+    single = kern.run_blocked(state, (0.2,), steps=2, m=1, block_h=4)
+    on = kern.sharded(2).run_blocked(  # 8-row shards, nblk=2
+        state, (0.2,), steps=2, m=1, block_h=4, overlap=True
+    )
+    np.testing.assert_array_equal(np.asarray(on), np.asarray(single))
+
+
 @_needs_devices(2)
 def test_diffusion_app_runs_end_to_end_sharded(dif_sim):
     """The app-level driver runs sharded and keeps the right physics
@@ -261,10 +319,10 @@ def test_sharded_run_for_point_legalizes_per_shard(dif_sim):
     u0, _ = dif.sine_init(16, 64)
     state = dif_sim.state(u0)
     sk = dif_sim.kernel.sharded(2)
-    out, (bh, m) = sk.run_for_point(state, (0.2,), point=pt)
+    out, (bh, m, db) = sk.run_for_point(state, (0.2,), point=pt)
     assert 8 % bh == 0  # divisor of the shard height 16/2
     want = dif_sim.kernel.run_blocked(
-        state, (0.2,), steps=m, m=m, block_h=bh
+        state, (0.2,), steps=m, m=m, block_h=bh, double_buffer=db
     )
     np.testing.assert_array_equal(np.asarray(out), np.asarray(want))
 

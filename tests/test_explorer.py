@@ -328,11 +328,11 @@ def test_hardware_report_workload_roundtrip():
 
 
 def test_blocking_plan_legalizes():
-    assert blocking_plan(64, 64, 4) == (64, 4)
-    assert blocking_plan(64, 256, 4) == (64, 4)  # clamp to grid
-    assert blocking_plan(64, 24, 4) == (16, 4)  # nearest divisor below
-    assert blocking_plan(48, 8, 12) == (12, 12)  # m forces block up
-    bh, m = blocking_plan(30, 7, 4)
+    assert blocking_plan(64, 64, 4) == (64, 4, True)
+    assert blocking_plan(64, 256, 4) == (64, 4, True)  # clamp to grid
+    assert blocking_plan(64, 24, 4) == (16, 4, True)  # nearest divisor below
+    assert blocking_plan(48, 8, 12) == (12, 12, True)  # m forces block up
+    bh, m, _ = blocking_plan(30, 7, 4)
     assert 30 % bh == 0 and m <= bh
 
 
@@ -352,7 +352,7 @@ def test_run_factory_path_gets_vmem_stripe_check(explorer):
     )
     seen = []
 
-    def rf(nsteps, m, block_h, d):
+    def rf(nsteps, m, block_h, d, double_buffer=True):
         seen.append((block_h, m, nsteps, d))
         return lambda: None
 
@@ -373,7 +373,8 @@ def test_run_factory_path_gets_vmem_stripe_check(explorer):
         h, r.point, None, halo=sweep.workload.halo, width=w,
         words=sweep.workload.words_in, d=1,
     )
-    assert (r.block_h, r.m, r.steps) == want  # identical to codegen path
+    # identical to codegen path (incl. the buffer protocol)
+    assert (r.block_h, r.m, r.steps, r.double_buffer) == want
     assert seen[-1] == (r.block_h, r.m, r.steps, 1)
 
 
@@ -389,7 +390,7 @@ def test_execute_frontier_closes_the_loop_hand_written_kernel():
     sweep = sim.explorer().sweep_tpu(bh_values=(8, 16), m_values=(1, 2))
     f, attr, _ = lbm.taylor_green_init(16, 32)
 
-    def run_factory(nsteps, m, block_h, d):
+    def run_factory(nsteps, m, block_h, d, double_buffer=True):
         if d != 1:
             return None  # the hand-written kernel has no sharded form
         return lambda: lbm_run_blocked(
