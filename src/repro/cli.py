@@ -278,5 +278,133 @@ def explore_main(argv: list[str] | None = None) -> None:
         print(f"\n[wrote {args.json}]")
 
 
+def serve_main(argv: list[str] | None = None) -> None:
+    """The `repro-serve` command: the multi-tenant simulation-serving
+    engine (DESIGN.md §13, docs/pipeline.md §serve) under open-loop
+    Poisson load.
+
+    Builds a tenant mix (2-D diffusion at two grid sizes plus the uLBM
+    core), submits ``--requests`` jobs per tenant at ``--arrival-rate``
+    expected arrivals per engine tick, and serves them through
+    :class:`repro.serve.sim.SimEngine`: requests sharing a trial
+    context stack along the batch axis ``b``, each context autotunes on
+    first request under a hard ``--budget`` of live measurements, and
+    ``--study-dir`` makes the tuning durable — a second invocation with
+    the same directory warm-starts every plan with zero live timings.
+    """
+    import numpy as np
+
+    from repro.apps import diffusion as dif
+    from repro.apps import lbm
+    from repro.serve.sim import PlanResolver, SimEngine, SimRequest
+
+    ap = argparse.ArgumentParser(prog="repro-serve", description=__doc__)
+    ap.add_argument("--tenants", type=int, default=3, metavar="N",
+                    help="tenant contexts in the mix, drawn cyclically "
+                         "from the built-in set (diffusion 32x32 / "
+                         "64x64, lbm 32x32); each is a distinct trial "
+                         "context with its own autotuned plan")
+    ap.add_argument("--requests", type=int, default=8, metavar="N",
+                    help="requests submitted per tenant")
+    ap.add_argument("--steps", type=int, default=16, metavar="N",
+                    help="simulation steps per request")
+    ap.add_argument("--arrival-rate", type=float, default=8.0,
+                    metavar="R",
+                    help="open-loop Poisson intensity: expected "
+                         "arrivals per engine tick (saturating rates "
+                         "build the backlog that fills the batch axis)")
+    ap.add_argument("--budget", type=int, default=4, metavar="N",
+                    help="hard cap on live tuning measurements per "
+                         "trial context (autotune-on-first-request; "
+                         "exhaustion falls back to the model's plan)")
+    ap.add_argument("--study-dir", type=str, default=None, metavar="PATH",
+                    help="directory for the per-context tuning studies "
+                         "(default: $REPRO_STUDY_DIR or ~/.cache/repro/"
+                         "studies); reuse it to warm-start with zero "
+                         "live timings")
+    ap.add_argument("--max-queue", type=int, default=64, metavar="N",
+                    help="admission queue bound — submissions beyond it "
+                         "are rejected with backpressure, never dropped "
+                         "silently")
+    ap.add_argument("--seed", type=int, default=0, metavar="N",
+                    help="RNG seed for the arrival schedule")
+    ap.add_argument("--json", type=str, default=None, metavar="PATH",
+                    help="write the engine stats as JSON")
+    args = ap.parse_args(argv)
+
+    mix = []
+    for h, w, alpha in ((32, 32, 0.2), (64, 64, 0.1)):
+        sim = dif.DiffusionSimulation(h, w, alpha=alpha)
+        u0, _ = dif.sine_init(h, w)
+        mix.append((f"diffusion-{h}x{w}", sim.kernel, sim.state(u0),
+                    (sim.alpha,)))
+    lsim = lbm.LBMSimulation(lbm.LBMProblem(32, 32, mode="wrap"))
+    f0, attr, _ = lbm.taylor_green_init(32, 32)
+    mix.append(("lbm-32x32", lsim.stream_kernel(),
+                lsim.stream_state(f0, attr), lsim.stream_regs()))
+    tenants = [mix[i % len(mix)] for i in range(args.tenants)]
+
+    engine = SimEngine(
+        PlanResolver(budget=args.budget, study_dir=args.study_dir),
+        max_queue=args.max_queue,
+    )
+    rng = np.random.default_rng(args.seed)
+    total = args.requests * len(tenants)
+    ticks = np.floor(np.cumsum(
+        rng.exponential(1.0 / args.arrival_rate, size=total)
+    )).astype(int)
+    order = rng.permutation(
+        np.repeat(np.arange(len(tenants)), args.requests)
+    )
+    schedule = list(zip(ticks.tolist(), order.tolist()))
+
+    print("=" * 72)
+    print(f"simulation-as-a-service: {total} request(s) over "
+          f"{len(tenants)} tenant(s),")
+    print(f"rate {args.arrival_rate}/tick, {args.steps} steps/request, "
+          f"tuning budget {args.budget}")
+    print("=" * 72)
+    completions = []
+    rid = 0
+    i = 0
+    while i < len(schedule) or engine.queue or engine._active_count():
+        while i < len(schedule) and schedule[i][0] <= engine.tick_count:
+            name, core, state, regs = tenants[schedule[i][1]]
+            engine.submit(SimRequest(rid=rid, core=core, state=state,
+                                     steps=args.steps, regs=regs))
+            rid += 1
+            i += 1
+        completions.extend(engine.step())
+    stats = engine.stats()
+    lat = sorted(c.latency_s for c in completions)
+
+    def pct(p):
+        return lat[min(len(lat) - 1, int(p / 100 * len(lat)))] if lat else 0.0
+
+    print(f"{stats['completed']}/{stats['submitted']} completed "
+          f"({stats['rejected']} rejected with backpressure), "
+          f"{stats['launches']} launch(es) in {stats['ticks']} tick(s)")
+    print(f"steady-state {stats['steps_per_s']:.1f} member-steps/s; "
+          f"latency p50 {pct(50) * 1e3:.1f} ms / p95 {pct(95) * 1e3:.1f} "
+          f"ms / p99 {pct(99) * 1e3:.1f} ms")
+    print("batch occupancy: " + ", ".join(
+        f"b={k}: {v}" for k, v in stats["occupancy"].items()))
+    print(f"tuning: {stats['live_timings']} live timing(s), "
+          f"{stats['tuning_ticks']} tuning tick(s)"
+          + (" — warm start" if stats["live_timings"] == 0 else ""))
+    for key, plan in sorted(stats["plans"].items()):
+        print(f"  {key}: block_h={plan['block_h']} m={plan['m']} "
+              f"b={plan['b']} db={plan['double_buffer']} "
+              f"[{plan['source']}, {plan['budget_spent']} timed, "
+              f"{plan['replayed']} replayed]")
+
+    if args.json:
+        stats["latency"] = {"p50_s": pct(50), "p95_s": pct(95),
+                            "p99_s": pct(99)}
+        with open(args.json, "w", encoding="utf-8") as fh:
+            json.dump(stats, fh, indent=2, sort_keys=True)
+        print(f"\n[wrote {args.json}]")
+
+
 if __name__ == "__main__":
     explore_main()

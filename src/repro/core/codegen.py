@@ -371,7 +371,15 @@ class StreamKernel:
     # ---- the lowered stripe function --------------------------------------
 
     def _step_fn(self, f_ext, regs):
-        """One application of the core over an extended (halo'd) stripe."""
+        """One application of the core over an extended (halo'd) stripe.
+
+        A rank-3 stripe is ``(P, rows, W)``; higher ranks carry batch
+        axes in front (``(B, P, rows, W)``, docs/pipeline.md §serve) and
+        are handled by vmapping this same body over each leading axis,
+        so batched and unbatched launches share one lowering.
+        """
+        if f_ext.ndim > 3:
+            return jax.vmap(lambda s: self._step_fn(s, regs))(f_ext)
         env: dict = {p: f_ext[i] for i, p in enumerate(self._ports)}
         env.update(dict(zip(self._regs, regs)))
         env.update({k: jnp.float32(v) for k, v in self._params.items()})
@@ -445,11 +453,17 @@ class StreamKernel:
         :func:`repro.core.legalize.resolve_run_plan`, using this kernel's
         inferred halo and the state's concrete width for the VMEM clamp
         (with the double-buffered→single-buffered streaming fallback).
-        Returns ``(result, (block_h, m, double_buffer))``.
+        Returns ``(result, (block_h, m, double_buffer))``. ``state`` may
+        carry batch axes in front of ``(P, H, W)``; the VMEM clamp then
+        prices the full ``b``-wide stripe (docs/pipeline.md §serve).
         """
-        p, h, w = state.shape
+        *lead, h, w = state.shape
+        p = lead[-1] if lead else 1
+        b = 1
+        for n in lead[:-1]:
+            b *= int(n)
         block_h, m, nsteps, double_buffer = resolve_run_plan(
-            h, point, steps, halo=self.halo, width=w, words=p,
+            h, point, steps, halo=self.halo, width=w, words=p, b=b,
         )
         out = self.run_blocked(
             state, regs, steps=nsteps, m=m, block_h=block_h,
@@ -484,6 +498,22 @@ class StreamKernel:
                 f"{self._ports}, got {len(arrays)}"
             )
         return jnp.stack([jnp.asarray(a, jnp.float32) for a in arrays])
+
+    def pack_batch(self, states: Sequence) -> jnp.ndarray:
+        """Stack ``b`` packed (P, H, W) states into a (B, P, H, W) batch.
+
+        The batch axis groups independent simulations into one launch
+        (docs/pipeline.md §serve); members must share grid geometry.
+        """
+        if not states:
+            raise CodegenError("pack_batch needs at least one state")
+        arrs = [jnp.asarray(s, jnp.float32) for s in states]
+        if any(a.shape != arrs[0].shape for a in arrs):
+            raise CodegenError(
+                "pack_batch members must share one (P, H, W) geometry; "
+                f"got {[a.shape for a in arrs]}"
+            )
+        return jnp.stack(arrs)
 
 
 __all__ = [

@@ -408,12 +408,19 @@ class TPUModel:
         m: int,
         d: int = 1,
         double_buffer: bool = True,
+        b: int = 1,
     ) -> DesignPoint:
-        """One (block_h, m, d) design point. ``d`` is the device axis —
+        """One (block_h, m, d, b) design point. ``d`` is the device axis —
         the number of chips the grid is sharded across along y
-        (docs/pipeline.md §distribute)."""
+        (docs/pipeline.md §distribute); ``b`` the batch axis — the
+        number of independent simulations stacked into one launch
+        (docs/pipeline.md §serve): compute, HBM traffic and VMEM
+        residency all scale linearly with ``b``, and the VMEM term is
+        priced by the legalizer's own ``stripe_vmem_bytes(..., b=b)``
+        so modeled and executed geometry agree."""
         t = self.target
         d = int(d)
+        b = max(1, int(b))
         pt = DesignPoint(n=d, m=m, feasible=True)
         grid_w = w.grid_w or int(math.sqrt(w.elems))
         bytes_per_elem = 4 * (w.words_in + w.words_out)
@@ -426,23 +433,32 @@ class TPUModel:
             pt.feasible = False
             pt.limits.append(f"shard {w.elems // w.grid_w}%{d}!=0")
 
+        # The batched leading dim runs through the single-device stream
+        # kernels only; a batched *and* sharded launch has no executable
+        # geometry (repro.core.distribute handles (P, H, W) state).
+        if b > 1 and d > 1:
+            pt.feasible = False
+            pt.limits.append(f"batched b={b} + sharded d={d} unsupported")
+
         # VMEM residency: priced by the legalizer's own stripe formula
         # (repro.core.legalize.stripe_vmem_bytes) — one source of truth,
         # so a feasible point is never silently shrunk at run time and
         # model/legalizer budgets cannot drift apart.
         vmem = stripe_vmem_bytes(
             bh, m, grid_w, w.words_in, halo=w.halo,
-            double_buffer=double_buffer,
+            double_buffer=double_buffer, b=b,
         )
         if vmem > t.vmem_bytes:
             pt.feasible = False
             pt.limits.append(f"VMEM {vmem}>{t.vmem_bytes}")
 
         # Halo overhead: the 2·m·halo halo rows are recomputed per block.
+        # The batch axis multiplies sites (b independent grids advance
+        # per launch), leaving the useful fraction unchanged.
         useful = bh / (bh + 2 * m * w.halo)
-        flops = w.elems * w.flops_per_elem * m / useful  # incl. recompute
+        flops = b * w.elems * w.flops_per_elem * m / useful  # incl. recompute
         t_compute = flops / (d * t.vpu_f32_tflops * 1e12)
-        t_memory = w.elems * bytes_per_elem / (d * t.hbm_gbs * 1e9)
+        t_memory = b * w.elems * bytes_per_elem / (d * t.hbm_gbs * 1e9)
         # Cross-chip halo exchange (spatial split): 2·m·halo rows/neighbor.
         halo_bytes = 0.0
         if d > 1:
@@ -450,7 +466,7 @@ class TPUModel:
         t_coll = halo_bytes / (t.ici_gbs_per_link * 1e9)
 
         step_time = max(t_compute, t_memory, t_coll)
-        useful_flops = w.elems * w.flops_per_elem * m
+        useful_flops = b * w.elems * w.flops_per_elem * m
         sustained = useful_flops / step_time / 1e9 if step_time > 0 else 0.0
         peak = d * t.vpu_f32_tflops * 1e3  # GFlop/s
         # One spelling for the binding resource, shared verbatim with
@@ -479,6 +495,7 @@ class TPUModel:
             "vmem_frac": vmem / t.vmem_bytes,
             "d": d,
             "double_buffer": bool(double_buffer),
+            "b": b,
         }
         return pt
 
@@ -489,25 +506,28 @@ class TPUModel:
         m,
         d=1,
         double_buffer: bool = True,
+        b=1,
     ) -> dict[str, np.ndarray]:
-        """Vectorized :meth:`evaluate` over ``bh``/``m``/``d`` arrays.
+        """Vectorized :meth:`evaluate` over ``bh``/``m``/``d``/``b`` arrays.
 
         Coordinates broadcast against each other; returns a dict of arrays
         in the broadcast shape, numerically identical to the scalar path.
         ``d`` is the device axis; the returned dict carries it under both
-        ``"n"`` and ``"d"``.
+        ``"n"`` and ``"d"``. ``b`` is the batch axis (docs/pipeline.md
+        §serve), returned under ``"b"``.
         """
         t = self.target
         bh = np.asarray(bh, dtype=np.int64)
         m = np.asarray(m, dtype=np.int64)
         chips = np.asarray(d, dtype=np.int64)
-        bh, m, chips = np.broadcast_arrays(bh, m, chips)
+        batch = np.maximum(np.asarray(b, dtype=np.int64), 1)
+        bh, m, chips, batch = np.broadcast_arrays(bh, m, chips, batch)
         grid_w = w.grid_w or int(math.sqrt(w.elems))
         bytes_per_elem = 4 * (w.words_in + w.words_out)
 
         vmem = stripe_vmem_bytes(
             bh, m, grid_w, w.words_in, halo=w.halo,
-            double_buffer=double_buffer,
+            double_buffer=double_buffer, b=batch,
         )
         feasible = vmem <= t.vmem_bytes
         if w.grid_w:
@@ -515,18 +535,20 @@ class TPUModel:
             # path and the repro.core.distribute kernel's hard error).
             grid_h = w.elems // w.grid_w
             feasible = feasible & ((chips == 1) | (grid_h % chips == 0))
+        # batched + sharded has no executable geometry (scalar path's limit)
+        feasible = feasible & ((batch == 1) | (chips == 1))
 
         useful = bh / (bh + 2 * m * w.halo)
-        flops = w.elems * w.flops_per_elem * m / useful
+        flops = batch * w.elems * w.flops_per_elem * m / useful
         t_compute = flops / (chips * t.vpu_f32_tflops * 1e12)
-        t_memory = w.elems * bytes_per_elem / (chips * t.hbm_gbs * 1e9)
+        t_memory = batch * w.elems * bytes_per_elem / (chips * t.hbm_gbs * 1e9)
         halo_bytes = np.where(
             chips > 1, 2.0 * 2 * m * w.halo * grid_w * w.words_in * 4, 0.0
         )
         t_coll = halo_bytes / (t.ici_gbs_per_link * 1e9)
 
         step_time = np.maximum(np.maximum(t_compute, t_memory), t_coll)
-        useful_flops = w.elems * w.flops_per_elem * m
+        useful_flops = batch * w.elems * w.flops_per_elem * m
         sustained = np.where(step_time > 0, useful_flops / step_time / 1e9, 0.0)
         peak = chips * t.vpu_f32_tflops * 1e3
         util = np.where(peak > 0, sustained / peak, 0.0)
@@ -541,6 +563,7 @@ class TPUModel:
             "n": chips,
             "d": chips,
             "m": m,
+            "b": batch,
             "block_rows": bh,
             "feasible": feasible,
             "peak_gflops": peak,

@@ -201,12 +201,15 @@ class Sweep:
                 self.census,
                 **self.scalar_kwargs,
             )
+        kwargs = dict(self.scalar_kwargs)
+        if "b" in self.data:  # batch-axis sweeps (docs/pipeline.md §serve)
+            kwargs["b"] = int(self.data["b"][i])
         return self.model.evaluate(
             self.workload,
             int(self.data["block_rows"][i]),
             int(self.data["m"][i]),
             d=int(self.data["n"][i]),
-            **self.scalar_kwargs,
+            **kwargs,
         )
 
     def table(self, k: int | None = None, frontier_only: bool = False) -> str:
@@ -294,23 +297,28 @@ class Explorer:
         m_values: Sequence[int] = (1, 2, 4, 8, 16, 32),
         d_values: Sequence[int] = (1, 2, 4),
         double_buffer: bool = True,
+        b_values: Sequence[int] = (1,),
     ) -> Sweep:
-        """Evaluate the (block_h, m, d) lattice in one batched call.
+        """Evaluate the (block_h, m, d[, b]) lattice in one batched call.
 
         ``d`` is the device axis — chips the grid is sharded across
         along y (docs/pipeline.md §distribute). ``double_buffer``
         threads through to both the batched evaluation and the scalar
-        ``Sweep.point`` re-materialization.
+        ``Sweep.point`` re-materialization. ``b_values`` adds the batch
+        axis — independent simulations stacked into one launch
+        (docs/pipeline.md §serve); the default keeps the classic 3-D
+        lattice.
         """
-        bh, m, d = np.meshgrid(
+        bh, m, d, b = np.meshgrid(
             np.asarray(bh_values, np.int64),
             np.asarray(m_values, np.int64),
             np.asarray(d_values, np.int64),
+            np.asarray(b_values, np.int64),
             indexing="ij",
         )
         data = self.tpu.evaluate_batch(
             self.workload, bh.ravel(), m.ravel(), d=d.ravel(),
-            double_buffer=double_buffer,
+            double_buffer=double_buffer, b=b.ravel(),
         )
         return Sweep(
             "tpu", self.workload, self.tpu, data,

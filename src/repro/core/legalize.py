@@ -31,6 +31,14 @@ buffers so copy overlaps compute, and every stripe is accounted at
 sequentially and the whole budget holds a single stripe — the
 *streaming fallback* :func:`blocking_plan` drops to when no
 double-buffered stripe fits.
+
+The batch axis ``b`` (docs/pipeline.md §serve, DESIGN.md §13) stacks
+``b`` independent simulations into one launch along a leading array
+dimension: every stripe then holds ``b`` members' rows at once, so all
+stripe accounting scales linearly — ``b × stripe_vmem_bytes(..., b=1)``
+— single-sourced here so the serving engine's batched plans and the
+model's feasibility mask (``TPUModel.evaluate``) price the identical
+geometry.
 """
 
 from __future__ import annotations
@@ -47,18 +55,27 @@ VMEM_DOUBLE_BUFFER = 2
 
 
 def stripe_vmem_bytes(block_h, m, width: int, words: int,
-                      halo: int = 1, double_buffer: bool = True):
+                      halo: int = 1, double_buffer: bool = True,
+                      b: int = 1):
     """VMEM bytes of one (block_h + 2·m·halo)-row f32 stripe of ``words``
     fields, matching the residency term of ``TPUModel.evaluate``.
 
     ``double_buffer=True`` prices the ping/pong pair
     (:data:`VMEM_DOUBLE_BUFFER` stripes resident); ``False`` prices the
-    single-buffer streaming fallback. ``block_h``/``m`` may be numpy
-    arrays (the model's batched lattice evaluation broadcasts through).
+    single-buffer streaming fallback. ``b`` is the batch axis
+    (docs/pipeline.md §serve): ``b`` stacked simulations keep ``b``
+    copies of every stripe resident, a plain linear multiplier — the one
+    place the batched geometry is priced, so model and legalizer cannot
+    drift. ``block_h``/``m`` may be numpy arrays (the model's batched
+    lattice evaluation broadcasts through).
     """
     rows = block_h + 2 * m * halo
     mult = VMEM_DOUBLE_BUFFER if double_buffer else 1
-    return rows * max(width, 1) * max(words, 1) * 4 * mult
+    if getattr(b, "shape", None) in (None, ()):  # scalar: clamp to >= 1
+        b = max(int(b), 1)
+    # else: array batch-axis values broadcast straight through (the
+    # model's batched lattice evaluation pre-clamps them)
+    return rows * max(width, 1) * max(words, 1) * 4 * mult * b
 
 
 def shard_height(h: int, d: int) -> int:
@@ -84,7 +101,8 @@ def legal_block_values(h: int, m: int, *, halo: int = 1,
                        width: int = 0, words: int = 0,
                        vmem_bytes: int = VMEM_BYTES,
                        d: int = 1,
-                       double_buffer: bool = True) -> tuple[int, ...]:
+                       double_buffer: bool = True,
+                       b: int = 1) -> tuple[int, ...]:
     """Every legal ``block_h`` for ``m`` fused steps on an ``h``-row grid.
 
     The ascending chain of shard-height divisors that can source the
@@ -111,7 +129,7 @@ def legal_block_values(h: int, m: int, *, halo: int = 1,
         legal = [
             v for v in legal
             if stripe_vmem_bytes(v, m, width, words, halo,
-                                 double_buffer) <= vmem_bytes
+                                 double_buffer, b=b) <= vmem_bytes
         ]
     return tuple(legal)
 
@@ -119,7 +137,8 @@ def legal_block_values(h: int, m: int, *, halo: int = 1,
 def blocking_plan(h: int, block_h: int, m: int, *, halo: int = 1,
                   width: int = 0, words: int = 0,
                   vmem_bytes: int = VMEM_BYTES, d: int = 1,
-                  double_buffer: bool = True) -> tuple[int, int, bool]:
+                  double_buffer: bool = True,
+                  b: int = 1) -> tuple[int, int, bool]:
     """Legalize a model-chosen (block_h, m) for a grid of ``h`` rows.
 
     The temporal-blocking kernels require ``block_h | h`` and
@@ -149,6 +168,11 @@ def blocking_plan(h: int, block_h: int, m: int, *, halo: int = 1,
     stripe budget is the whole VMEM; only when even that cannot fit is a
     ``ValueError`` raised (better than an opaque on-device VMEM
     allocation failure).
+
+    ``b > 1`` legalizes a batched launch (docs/pipeline.md §serve):
+    the same divisor chain, with every stripe priced at ``b`` members'
+    residency — a batch that would overflow VMEM shrinks the block (or
+    drops to single-buffer) exactly as a wider grid would.
     """
     if h < 1:
         raise ValueError(f"grid height must be positive, got {h}")
@@ -169,11 +193,12 @@ def blocking_plan(h: int, block_h: int, m: int, *, halo: int = 1,
             f"it{f'; grid h={h} over d={d} shards' if d > 1 else ''})"
         )
     double_buffer = bool(double_buffer)
+    b = max(1, int(b))
     if width and words:
         fits = [
             v for v in legal
             if stripe_vmem_bytes(v, m, width, words, halo,
-                                 double_buffer) <= vmem_bytes
+                                 double_buffer, b=b) <= vmem_bytes
         ]
         if not fits and double_buffer:
             # Streaming fallback: a single-buffered stripe has the whole
@@ -183,7 +208,7 @@ def blocking_plan(h: int, block_h: int, m: int, *, halo: int = 1,
             fits = [
                 v for v in legal
                 if stripe_vmem_bytes(v, m, width, words, halo,
-                                     double_buffer) <= vmem_bytes
+                                     double_buffer, b=b) <= vmem_bytes
             ]
         if not fits:  # no legal block fits: fail loudly, not on-device
             smallest = min(legal)
@@ -191,8 +216,8 @@ def blocking_plan(h: int, block_h: int, m: int, *, halo: int = 1,
                 f"no legal block for shard h={local_h} fits VMEM even via "
                 f"the single-buffer streaming fallback "
                 f"(double_buffer=False): smallest stripe "
-                f"(block_h={smallest}, m={m}, halo={halo}) needs "
-                f"{stripe_vmem_bytes(smallest, m, width, words, halo, False)}"
+                f"(block_h={smallest}, m={m}, halo={halo}, b={b}) needs "
+                f"{stripe_vmem_bytes(smallest, m, width, words, halo, False, b=b)}"
                 f" B > budget {vmem_bytes} B"
             )
         legal = fits
@@ -203,7 +228,8 @@ def blocking_plan(h: int, block_h: int, m: int, *, halo: int = 1,
 def constraint_violation(h: int, block_h: int, m: int, *, halo: int = 1,
                          width: int = 0, words: int = 0,
                          vmem_bytes: int = VMEM_BYTES, d: int = 1,
-                         double_buffer: bool = True) -> float:
+                         double_buffer: bool = True,
+                         b: int = 1) -> float:
     """Continuous distance-to-feasibility of a (block_h, m, d) request.
 
     Exactly ``0.0`` iff :func:`blocking_plan` would produce a legal plan
@@ -255,15 +281,16 @@ def constraint_violation(h: int, block_h: int, m: int, *, halo: int = 1,
         m -= 1
         floor = max(1, m * halo)
         legal = [v for v in divisors if v >= floor]
+    b = max(1, int(b))
     need = min(
-        stripe_vmem_bytes(v, m, width, words, halo, double_buffer)
+        stripe_vmem_bytes(v, m, width, words, halo, double_buffer, b=b)
         for v in legal
     )
     if need <= vmem_bytes:
         return 0.0
     if double_buffer:
         need = min(
-            stripe_vmem_bytes(v, m, width, words, halo, False)
+            stripe_vmem_bytes(v, m, width, words, halo, False, b=b)
             for v in legal
         )
         if need <= vmem_bytes:
@@ -274,7 +301,7 @@ def constraint_violation(h: int, block_h: int, m: int, *, halo: int = 1,
 def resolve_run_plan(
     h: int, point, steps: int | None = None, *, halo: int = 1,
     width: int = 0, words: int = 0, d: int = 1,
-    vmem_bytes: int = VMEM_BYTES,
+    vmem_bytes: int = VMEM_BYTES, b: int | None = None,
 ) -> tuple[int, int, int, bool]:
     """Turn a DSE design point into a concrete
     (block_h, m, steps, double_buffer) plan.
@@ -287,13 +314,21 @@ def resolve_run_plan(
     double-buffered→single-buffered streaming fallback applied; ``steps``
     defaults to one fused launch (m steps) and is rounded down to a
     multiple of m.
+
+    ``b`` is the batch axis (docs/pipeline.md §serve): ``None`` reads
+    the point's ``detail['b']`` (1 when absent, matching pre-batch
+    points), an explicit value overrides. The batch scales the VMEM
+    accounting; it is not returned — it is a launch-shape property the
+    caller already holds, not something legalization changes.
     """
     detail = getattr(point, "detail", None) or {}
     requested_db = bool(detail.get("double_buffer", True))
+    if b is None:
+        b = int(detail.get("b", 1))
     block_h, m, double_buffer = blocking_plan(
         h, int(point.detail["block_rows"]), int(point.m),
         halo=halo, width=width, words=words, d=d, vmem_bytes=vmem_bytes,
-        double_buffer=requested_db,
+        double_buffer=requested_db, b=b,
     )
     nsteps = m if steps is None else max(m, (steps // m) * m)
     return block_h, m, nsteps, double_buffer

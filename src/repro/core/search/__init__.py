@@ -31,6 +31,7 @@ from .strategies import (
     STRATEGIES,
     ExhaustiveSearch,
     LocalRefine,
+    SearchStepper,
     SearchStrategy,
     SuccessiveHalving,
     get_strategy,
@@ -49,6 +50,7 @@ __all__ = [
     "STRATEGIES",
     "SearchResult",
     "SearchRunner",
+    "SearchStepper",
     "SearchStrategy",
     "Study",
     "SuccessiveHalving",

@@ -62,6 +62,19 @@ class BudgetExhausted(RuntimeError):
     """A live measurement was requested beyond the hard budget."""
 
 
+def _point_b(point) -> int:
+    """The batch-axis width a design point was modeled at (1 if none).
+
+    Carried in ``DesignPoint.detail`` (set by ``TPUModel.evaluate``) so
+    pre-batch points — older studies, FPGA points — legalize as b=1.
+    """
+    detail = getattr(point, "detail", None) or {}
+    try:
+        return max(1, int(detail.get("b", 1)))
+    except (TypeError, ValueError):
+        return 1
+
+
 @dataclass(frozen=True)
 class RunPlan:
     """One concrete, legalized execution: what a measurement times.
@@ -71,7 +84,9 @@ class RunPlan:
     different measurements (successive halving relies on that), and
     ``double_buffer`` is part of it because the ping/pong and
     single-buffer streamed kernels are different code
-    (docs/pipeline.md §stream).
+    (docs/pipeline.md §stream), and the batch axis ``b`` is part of it
+    because a ``b``-wide launch moves ``b×`` the data per stripe
+    (docs/pipeline.md §serve).
     """
 
     block_h: int
@@ -80,10 +95,11 @@ class RunPlan:
     d: int
     reps: int
     double_buffer: bool = True
+    b: int = 1
 
     def key(self) -> tuple:
         return (self.block_h, self.m, self.steps, self.d, self.reps,
-                bool(self.double_buffer))
+                bool(self.double_buffer), self.b)
 
     def as_dict(self) -> dict:
         return {
@@ -93,6 +109,7 @@ class RunPlan:
             "d": int(self.d),
             "reps": int(self.reps),
             "double_buffer": bool(self.double_buffer),
+            "b": int(self.b),
         }
 
 
@@ -107,6 +124,7 @@ EXECUTED_POINT_FIELDS = (
     "m",
     "d",
     "double_buffer",
+    "b",
     "steps",
     "wall_s",
     "measured_mlups",
@@ -145,6 +163,7 @@ class ExecutedPoint:
     #                       this search already timed the same plan)
     reps: int = 1
     double_buffer: bool = True  # streamed buffer protocol actually run
+    b: int = 1  # batch axis: independent simulations stacked in the launch
 
     def as_dict(self) -> dict:
         """JSON-ready record — the one serialization shared by the CLI's
@@ -156,6 +175,7 @@ class ExecutedPoint:
             "m": int(self.m),
             "d": int(self.d),
             "double_buffer": bool(self.double_buffer),
+            "b": int(self.b),
             "steps": int(self.steps),
             "wall_s": float(self.wall_s),
             "measured_mlups": float(self.measured_mlups),
@@ -176,15 +196,26 @@ class ExecutedPoint:
 def kernel_run_factory(kern, state, regs: Sequence, interpret: bool):
     """The default back end: a codegen'd StreamKernel, sharded for d>1.
 
-    Returns the ``run_factory(nsteps, m, block_h, d, double_buffer)``
+    Returns the ``run_factory(nsteps, m, block_h, d, double_buffer, b)``
     the runner calls; ``d > 1`` plans go through ``kern.sharded(d)``
     (cached per d on the kernel, docs/pipeline.md §distribute), and
     ``double_buffer`` selects the streamed launch's buffer protocol
-    (docs/pipeline.md §stream).
+    (docs/pipeline.md §stream). ``b > 1`` plans tile ``state`` into a
+    ``(b, P, H, W)`` batch (docs/pipeline.md §serve); batched sharded
+    geometry does not exist, so ``b > 1`` with ``d > 1`` declines.
     """
+    import jax.numpy as jnp
 
     def run_factory(nsteps: int, m: int, block_h: int, d: int,
-                    double_buffer: bool = True):
+                    double_buffer: bool = True, b: int = 1):
+        if b > 1:
+            if d > 1:
+                return None  # no batched sharded launch (see TPUModel)
+            batched = jnp.stack([state] * b)
+            return lambda: kern.run_blocked(
+                batched, regs, steps=nsteps, m=m, block_h=block_h,
+                double_buffer=double_buffer, interpret=interpret,
+            )
         if d == 1:
             return lambda: kern.run_blocked(
                 state, regs, steps=nsteps, m=m, block_h=block_h,
@@ -319,16 +350,17 @@ class SearchRunner:
         d = max(1, int(point.n))
         if d > self.max_devices:
             return None
+        b = _point_b(point)
         try:
             block_h, m, nsteps, double_buffer = resolve_run_plan(
                 self.h, point, self.steps, halo=self.halo,
-                width=self.width, words=self.words, d=d,
+                width=self.width, words=self.words, d=d, b=b,
             )
         except ValueError:
             return None
         return RunPlan(block_h, m, nsteps, d,
                        self.reps if reps is None else int(reps),
-                       double_buffer)
+                       double_buffer, b)
 
     # ---- cache / study key space -------------------------------------------
 
@@ -362,7 +394,7 @@ class SearchRunner:
         return measure.MeasurementCache.make_key(
             fp, (self.h, self.w),
             (plan.block_h, plan.m, plan.steps, plan.d,
-             int(plan.double_buffer)),
+             int(plan.double_buffer), plan.b),
             self.backend, self.interpret, plan.reps, self.warmup,
         )
 
@@ -421,24 +453,33 @@ class SearchRunner:
         if d > self.max_devices:
             self.skipped_devices += 1
             return None
+        b = _point_b(point)
         reps = self.reps if reps is None else int(reps)
         try:
             block_h, m, nsteps, double_buffer = resolve_run_plan(
                 self.h, point, self.steps, halo=self.halo,
-                width=self.width, words=self.words, d=d,
+                width=self.width, words=self.words, d=d, b=b,
             )
         except ValueError:
             self.skipped_illegal += 1
             return None
-        plan = RunPlan(block_h, m, nsteps, d, reps, double_buffer)
+        plan = RunPlan(block_h, m, nsteps, d, reps, double_buffer, b)
 
         cached = True
         wall = self._walls.get(plan.key())  # in-run dedupe, cache-independent
         if wall is None:
-            try:
-                run = self.run_factory(nsteps, m, block_h, d, double_buffer)
-            except TypeError:  # legacy 4-arg factories predate the knob
-                run = self.run_factory(nsteps, m, block_h, d)
+            if b != 1:
+                # Batched plans need a batch-aware factory; older ones
+                # (and custom back ends) never see the kwarg for b=1.
+                run = self.run_factory(nsteps, m, block_h, d,
+                                       double_buffer, b=b)
+            else:
+                try:
+                    run = self.run_factory(
+                        nsteps, m, block_h, d, double_buffer
+                    )
+                except TypeError:  # legacy 4-arg factories predate the knob
+                    run = self.run_factory(nsteps, m, block_h, d)
             if run is None:
                 return None  # this back end cannot execute the point
             key = None
@@ -462,7 +503,7 @@ class SearchRunner:
                     self.cache.put(key, record)
             self._walls[plan.key()] = wall
 
-        sites = self.h * self.w * nsteps
+        sites = self.h * self.w * nsteps * b  # every batch member counts
         flops_per_elem = self.workload.flops_per_elem
         mlups = sites / wall / 1e6
         measured = sites * flops_per_elem / wall / 1e9
@@ -473,6 +514,7 @@ class SearchRunner:
             # raw lattice pick) under the measured platform constants.
             calibrated = self._calibrated_model(d, (block_h, m)).evaluate(
                 self.workload, block_h, m, d=d, double_buffer=double_buffer,
+                b=b,
             ).sustained_gflops
         headline = calibrated if calibrated is not None else predicted
         executed = ExecutedPoint(
@@ -494,6 +536,7 @@ class SearchRunner:
             cached=cached,
             reps=reps,
             double_buffer=double_buffer,
+            b=b,
         )
         if self.study is not None:
             self.study.record_trial(self, executed, **self.study_meta)

@@ -48,6 +48,7 @@ __all__ = [
     "ExhaustiveSearch",
     "LocalRefine",
     "STRATEGIES",
+    "SearchStepper",
     "SearchStrategy",
     "SuccessiveHalving",
     "get_strategy",
@@ -90,7 +91,7 @@ def _ranked_candidates(sweep, runner: SearchRunner) -> list:
         if plan is None:
             continue
         dedup = (plan.block_h, plan.m, plan.steps, plan.d,
-                 plan.double_buffer)
+                 plan.double_buffer, plan.b)
         if dedup in seen:
             continue
         seen.add(dedup)
@@ -160,7 +161,7 @@ class LocalRefine:
             e = runner.measure(pt)
             if e is None:
                 return None
-            plan = (e.block_h, e.m, e.steps, e.d, e.double_buffer)
+            plan = (e.block_h, e.m, e.steps, e.d, e.double_buffer, e.b)
             if plan not in seen:
                 seen.add(plan)
                 out.append(e)
@@ -281,6 +282,72 @@ class SuccessiveHalving:
         except BudgetExhausted:
             pass
         return out
+
+
+class SearchStepper:
+    """Drive any search strategy one live measurement at a time.
+
+    The non-blocking ``suggest/observe`` seam the serving engine's tick
+    loop needs (docs/pipeline.md §serve, DESIGN.md §13): a long-running
+    service cannot hand the device to ``strategy.search`` for a whole
+    budget's worth of timings, but every shipped strategy is
+    *deterministic given the runner's dedupe table* — so each
+    :meth:`step` simply re-runs the strategy under a budget of
+    ``spent + 1``. Everything earlier steps measured replays for free
+    from the table, the strategy fast-forwards to its next unmeasured
+    candidate, times exactly that one, and is cut off. One step ≈ one
+    kernel timing; ticks interleave in between.
+
+    The stepper never exceeds the runner's own hard budget (``cap``):
+    once spent reaches it, :attr:`exhausted` is set and stepping ends —
+    the caller falls back to the best measured point so far, or to the
+    model-predicted plan when nothing was measured
+    (docs/pipeline.md §serve). A step that measures nothing new means
+    the strategy has converged (:attr:`done`); the final ``executed``
+    list is then exactly what one blocking ``search()`` call would have
+    returned.
+    """
+
+    def __init__(self, strategy, sweep, runner: SearchRunner):
+        self.strategy = get_strategy(strategy)
+        self.sweep = sweep
+        self.runner = runner
+        self.cap = runner.budget  # the search's true hard budget
+        self.executed: list[ExecutedPoint] = []
+        self.done = False
+        self.exhausted = False
+
+    def step(self) -> ExecutedPoint | None:
+        """Advance by at most one live timing.
+
+        Returns the newly measured point, or ``None`` when the search
+        is over (converged or budget-exhausted — check the flags).
+        """
+        if self.done:
+            return None
+        spent0 = self.runner.budget_spent
+        if self.cap is not None and spent0 >= self.cap:
+            self.done = self.exhausted = True
+            return None
+        self.runner.budget = spent0 + 1
+        try:
+            self.executed = self.strategy.search(self.sweep, self.runner)
+        except BudgetExhausted:  # strategies catch this; belt and braces
+            pass
+        finally:
+            self.runner.budget = self.cap
+        if self.runner.budget_spent == spent0:
+            # The strategy finished without wanting another timing.
+            self.done = True
+            return None
+        fresh = [e for e in self.executed if not e.cached]
+        return fresh[-1] if fresh else None
+
+    def best(self) -> ExecutedPoint | None:
+        """Measured-best executed point so far (None before any timing)."""
+        return max(
+            self.executed, key=lambda e: e.measured_gflops, default=None,
+        )
 
 
 from .surrogate import TPESearch  # noqa: E402 — registry import, not a cycle

@@ -167,8 +167,11 @@ class Study:
                 point.get("steps"), point.get("d"), point.get("reps"),
                 # Older journals predate the double_buffer plan dimension
                 # (docs/pipeline.md §stream); they recorded the
-                # then-default ping/pong protocol.
+                # then-default ping/pong protocol. Likewise b=1 for
+                # journals older than the batch axis
+                # (docs/pipeline.md §serve).
                 bool(point.get("double_buffer", True)),
+                int(point.get("b", 1)),
             )
         coords = rec.get("coords")
         if coords is not None:
@@ -200,7 +203,8 @@ class Study:
         point = executed.as_dict()
         plan = RunPlan(point["block_h"], point["m"], point["steps"],
                        point["d"], point["reps"],
-                       bool(point.get("double_buffer", True)))
+                       bool(point.get("double_buffer", True)),
+                       int(point.get("b", 1)))
         rec = {
             "v": self.VERSION,
             "study": self.name,
@@ -276,7 +280,8 @@ class Study:
             p = rec["point"]
             plan = RunPlan(int(p["block_h"]), int(p["m"]), int(p["steps"]),
                            int(p["d"]), int(p["reps"]),
-                           bool(p.get("double_buffer", True)))
+                           bool(p.get("double_buffer", True)),
+                           int(p.get("b", 1)))
             if plan.key() not in runner._walls:
                 runner._walls[plan.key()] = float(p["wall_s"])
                 n += 1

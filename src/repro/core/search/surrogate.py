@@ -102,7 +102,8 @@ class TPESearch:
             bh = int(sweep.data["block_rows"][i])
             m = int(sweep.data["m"][i])
             d = max(1, int(sweep.data["n"][i]))
-            coords = (bh, m, d)
+            b = (int(sweep.data["b"][i]) if "b" in sweep.data else 1)
+            coords = (bh, m, d, b)
             if coords in seen_coords:
                 continue
             seen_coords.add(coords)
@@ -117,25 +118,25 @@ class TPESearch:
             if plan is None:
                 viol = constraint_violation(
                     runner.h, bh, m, halo=runner.halo, width=runner.width,
-                    words=runner.words, d=d, double_buffer=req_db,
+                    words=runner.words, d=d, double_buffer=req_db, b=b,
                 )
                 out.append(_Candidate(
                     point=pt, coords=coords,
-                    x=self._features(bh, m, d, req_db),
+                    x=self._features(bh, m, d, req_db, b),
                     plan=None, violation=max(viol, 1e-9),
                     model_gflops=float(gflops[i]),
                 ))
                 continue
             pkey = (plan.block_h, plan.m, plan.steps, plan.d,
-                    plan.double_buffer)
+                    plan.double_buffer, plan.b)
             if pkey in seen_plans:
                 continue  # same concrete plan: model-best spelling wins
             seen_plans.add(pkey)
             out.append(_Candidate(
                 point=pt,
-                coords=(plan.block_h, plan.m, plan.d),
+                coords=(plan.block_h, plan.m, plan.d, plan.b),
                 x=self._features(plan.block_h, plan.m, plan.d,
-                                 plan.double_buffer),
+                                 plan.double_buffer, plan.b),
                 plan=plan, violation=0.0,
                 model_gflops=float(gflops[i]),
             ))
@@ -143,14 +144,16 @@ class TPESearch:
 
     @staticmethod
     def _features(bh: int, m: int, d: int,
-                  double_buffer: bool = True) -> np.ndarray:
+                  double_buffer: bool = True, b: int = 1) -> np.ndarray:
         """Log2 lattice coordinates plus the binary buffer-protocol axis:
         the natural metric of a power-of-two sweep (one halving/doubling
         = one unit in every dimension; a double_buffer flip likewise,
-        docs/pipeline.md §stream)."""
+        docs/pipeline.md §stream). The batch axis b joins in log2 too
+        (docs/pipeline.md §serve)."""
         return np.array(
             [math.log2(max(1, bh)), math.log2(max(1, m)),
-             math.log2(max(1, d)), float(bool(double_buffer))], float,
+             math.log2(max(1, d)), float(bool(double_buffer)),
+             math.log2(max(1, b))], float,
         )
 
     # ---- density model -----------------------------------------------------

@@ -22,6 +22,14 @@ W)`` — is produced by :class:`repro.core.codegen.StreamKernel` from the
 core's data-flow graph; this module only owns the ``pallas_call``
 plumbing, exactly mirroring ``lbm_multistep`` so the two back ends stay
 comparable line for line.
+
+The batch axis (docs/pipeline.md §serve, DESIGN.md §13): state may
+carry extra *leading* dimensions — ``(B, P, H, W)`` stacks B
+independent simulations — and the launch generalizes mechanically: row
+blocks are tiled on axis ``-2``, leading axes ride whole through every
+BlockSpec, and the stripe function must handle the batched rank (the
+codegen'd ``step_fn`` vmaps itself over leading axes). The batched
+launch is bitwise identical per member to B separate launches.
 """
 
 from __future__ import annotations
@@ -39,17 +47,19 @@ def _kernel(scal_ref, fc_ref, fu_ref, fd_ref, out_ref, *,
             step_fn: Callable, m: int, block_h: int, mh: int):
     regs = tuple(scal_ref[i] for i in range(scal_ref.shape[0]))
     if mh:
-        # Assemble the (P, block_h + 2·mh, W) extended stripe from the
-        # three VMEM-resident input stripes (the y-halo exchange).
+        # Assemble the (…, block_h + 2·mh, W) extended stripe from the
+        # three VMEM-resident input stripes (the y-halo exchange). Rows
+        # live on axis -2 so any leading (batch) axes ride through.
         f_ext = jnp.concatenate(
-            [fu_ref[:, block_h - mh:, :], fc_ref[...], fd_ref[:, :mh, :]],
-            axis=1,
+            [fu_ref[..., block_h - mh:, :], fc_ref[...],
+             fd_ref[..., :mh, :]],
+            axis=-2,
         )
     else:  # elementwise core: no neighbor rows needed
         f_ext = fc_ref[...]
     for _ in range(m):
         f_ext = step_fn(f_ext, regs)
-    out_ref[...] = f_ext[:, mh:mh + block_h, :]
+    out_ref[...] = f_ext[..., mh:mh + block_h, :]
 
 
 def spd_multistep(step_fn: Callable, state, scal, *, m: int, block_h: int,
@@ -61,7 +71,9 @@ def spd_multistep(step_fn: Callable, state, scal, *, m: int, block_h: int,
         application of the SPD core's dataflow over a row stripe, with y
         stencil reads sourced from within the stripe (edge rows go stale)
         and x stencil reads periodic in-register.
-      state: (P, H, W) f32 stacked main-stream state.
+      state: (P, H, W) f32 stacked main-stream state; extra leading
+        dimensions batch independent simulations — ``(B, P, H, W)``
+        launches B members in one call (docs/pipeline.md §serve).
       scal: (R,) f32 Append_Reg scalar values (length >= 1; padded with a
         dummy when the core has no registers — SMEM refs need a shape).
       m: fused time steps per HBM round-trip (temporal parallelism).
@@ -71,7 +83,7 @@ def spd_multistep(step_fn: Callable, state, scal, *, m: int, block_h: int,
       interpret: run under the Pallas interpreter (CPU validation); on
         real TPU pass False.
     """
-    p, h, w = state.shape
+    *lead, h, w = state.shape
     if h % block_h:
         raise ValueError(f"H={h} must be divisible by block_h={block_h}")
     mh = m * halo
@@ -80,9 +92,12 @@ def spd_multistep(step_fn: Callable, state, scal, *, m: int, block_h: int,
             f"m*halo={mh} must be <= block_h={block_h} (halo source)"
         )
     nblk = h // block_h
+    nlead = len(lead)
+    zeros = (0,) * nlead
 
     fspec = lambda off: pl.BlockSpec(
-        (p, block_h, w), lambda i, off=off: (0, (i + off) % nblk, 0)
+        (*lead, block_h, w),
+        lambda i, off=off: zeros + ((i + off) % nblk, 0),
     )
     return pl.pallas_call(
         functools.partial(
@@ -94,7 +109,9 @@ def spd_multistep(step_fn: Callable, state, scal, *, m: int, block_h: int,
             pl.BlockSpec(memory_space=pltpu.SMEM),
             fspec(0), fspec(-1), fspec(1),
         ],
-        out_specs=pl.BlockSpec((p, block_h, w), lambda i: (0, i, 0)),
+        out_specs=pl.BlockSpec(
+            (*lead, block_h, w), lambda i: zeros + (i, 0)
+        ),
         out_shape=jax.ShapeDtypeStruct(state.shape, state.dtype),
         interpret=interpret,
     )(scal, state, state, state)

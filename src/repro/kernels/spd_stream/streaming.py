@@ -28,6 +28,13 @@ overflows VMEM stream at bandwidth. Stripe assembly (up-halo tail,
 center block, down-halo head) is row-for-row identical to the
 BlockSpec kernel's ``jnp.concatenate``, so streamed and declarative
 launches — and the two ``nbuf`` variants — are bitwise identical.
+
+Like the BlockSpec launch, state may carry extra leading dimensions —
+``(B, P, H, W)`` batches B independent simulations into one walk
+(docs/pipeline.md §serve, DESIGN.md §13): rows stay on axis ``-2``,
+every stripe DMA moves all leading axes whole, and the VMEM scratch
+stacks scale by B exactly as the legalizer's
+``stripe_vmem_bytes(..., b=B)`` prices them.
 """
 
 from __future__ import annotations
@@ -50,29 +57,42 @@ def _stream_kernel(scal_ref, state_ref, out_ref, buf, obuf, insem, outsem, *,
     ``outsem`` the matching DMA semaphore stacks. ``src_starts(i)``
     maps a (traced) block index to the three source-row offsets of its
     stripe pieces in ``state_ref`` — periodic or guard-block-extended.
+    Rows are addressed on axis ``-2``; any leading (batch) axes are
+    copied whole per stripe piece.
     """
     regs = tuple(scal_ref[i] for i in range(scal_ref.shape[0]))
+    # Full-slice prefix covering the leading axes (P, or B and P when
+    # batched): state_ref is (…, H, W), buf slots are (…, rows, W).
+    lead = (slice(None),) * (len(state_ref.shape) - 2)
+
+    def rows(ref, start, size, slot=None):
+        """``ref`` restricted to ``size`` rows from ``start`` on axis -2
+        (optionally under a scratch-stack ``slot`` index)."""
+        idx = lead + (pl.ds(start, size), slice(None))
+        if slot is not None:
+            idx = (slot,) + idx
+        return ref.at[idx]
 
     def dma_in(slot, i):
         up, center, down = src_starts(i)
         copies = [
             pltpu.make_async_copy(
-                state_ref.at[:, pl.ds(center, block_h), :],
-                buf.at[slot, :, pl.ds(mh, block_h), :], insem.at[slot, 0]),
+                rows(state_ref, center, block_h),
+                rows(buf, mh, block_h, slot), insem.at[slot, 0]),
         ]
         if mh:
             copies.append(pltpu.make_async_copy(
-                state_ref.at[:, pl.ds(up, mh), :],
-                buf.at[slot, :, pl.ds(0, mh), :], insem.at[slot, 1]))
+                rows(state_ref, up, mh),
+                rows(buf, 0, mh, slot), insem.at[slot, 1]))
             copies.append(pltpu.make_async_copy(
-                state_ref.at[:, pl.ds(down, mh), :],
-                buf.at[slot, :, pl.ds(mh + block_h, mh), :],
+                rows(state_ref, down, mh),
+                rows(buf, mh + block_h, mh, slot),
                 insem.at[slot, 2]))
         return copies
 
     def dma_out(slot, blk):
         return pltpu.make_async_copy(
-            obuf.at[slot], out_ref.at[:, pl.ds(blk * block_h, block_h), :],
+            obuf.at[slot], rows(out_ref, blk * block_h, block_h),
             outsem.at[slot])
 
     if nbuf > 1:
@@ -109,7 +129,7 @@ def _stream_kernel(scal_ref, state_ref, out_ref, buf, obuf, insem, outsem, *,
         def _():
             dma_out(slot, i - nbuf).wait()
 
-        obuf[slot] = f_ext[:, mh:mh + block_h, :]
+        obuf[slot] = f_ext[..., mh:mh + block_h, :]
         dma_out(slot, i).start()
         return carry
 
@@ -130,7 +150,7 @@ def _stream_kernel(scal_ref, state_ref, out_ref, buf, obuf, insem, outsem, *,
 
 def _streamed_call(step_fn, state, scal, *, m, block_h, mh, nblk, nbuf,
                    out_h, src_starts, interpret):
-    p, _, w = state.shape
+    *lead, _, w = state.shape
     rows = block_h + 2 * mh
     return pl.pallas_call(
         functools.partial(
@@ -142,10 +162,10 @@ def _streamed_call(step_fn, state, scal, *, m, block_h, mh, nblk, nbuf,
             pl.BlockSpec(memory_space=pltpu.ANY),
         ],
         out_specs=pl.BlockSpec(memory_space=pltpu.ANY),
-        out_shape=jax.ShapeDtypeStruct((p, out_h, w), state.dtype),
+        out_shape=jax.ShapeDtypeStruct((*lead, out_h, w), state.dtype),
         scratch_shapes=[
-            pltpu.VMEM((nbuf, p, rows, w), state.dtype),
-            pltpu.VMEM((nbuf, p, block_h, w), state.dtype),
+            pltpu.VMEM((nbuf, *lead, rows, w), state.dtype),
+            pltpu.VMEM((nbuf, *lead, block_h, w), state.dtype),
             pltpu.SemaphoreType.DMA((nbuf, 3 if mh else 1)),
             pltpu.SemaphoreType.DMA((nbuf,)),
         ],
@@ -165,7 +185,7 @@ def spd_multistep_streamed(step_fn: Callable, state, scal, *, m: int,
     §stream). ``double_buffer`` picks the ping/pong (True) or
     single-buffer streaming-fallback (False) protocol.
     """
-    p, h, w = state.shape
+    *_, h, _ = state.shape
     if h % block_h:
         raise ValueError(f"H={h} must be divisible by block_h={block_h}")
     mh = m * halo
@@ -208,7 +228,7 @@ def spd_multistep_halo_streamed(step_fn: Callable, ext, scal, *, m: int,
             step_fn, ext, scal, m=m, block_h=block_h, halo=0,
             double_buffer=double_buffer, interpret=interpret,
         )
-    p, rows, w = ext.shape
+    *_, rows, _ = ext.shape
     local_h = rows - 2 * block_h
     if local_h < 1 or local_h % block_h:
         raise ValueError(

@@ -1,1 +1,7 @@
-"""Serving substrate: batched prefill + decode engine."""
+"""Serving substrate: batched engines over both model families.
+
+``engine`` serves LM decode (continuous batching over a fixed-slot KV
+cache); ``sim`` serves stream simulations — the multi-tenant
+simulation-as-a-service tier over the SPD→codegen→search pipeline
+(DESIGN.md §13, docs/pipeline.md §serve).
+"""

@@ -60,20 +60,53 @@ class ServeEngine:
         self.queue.put(req)
 
     def _admit(self) -> None:
+        new: list[int] = []
         for slot in range(self.max_batch):
             if self.slot_req[slot] is not None:
                 continue
             try:
                 req = self.queue.get_nowait()
             except queue.Empty:
-                return
+                break
             self.slot_req[slot] = req
             self.slot_pos[slot] = 0
             self.slot_out[slot] = []
-            # replay the prompt through the decode path to build the cache
-            for t, tok in enumerate(req.prompt[:-1]):
-                self._step_slot(slot, tok)
             self.slot_last[slot] = req.prompt[-1]
+            new.append(slot)
+        if new:
+            self._replay_prompts(new)
+
+    def _replay_prompts(self, slots: list[int]) -> None:
+        """Batched cache-building prefill for freshly admitted slots.
+
+        Every new slot starts at position 0 and ``decode_step`` takes
+        one shared scalar position, so slots replaying the same number
+        of prompt tokens advance in lockstep: one ``max_batch``-wide
+        launch per prompt *position* carrying every group member's
+        token, instead of one launch per (slot, position) — admission
+        cost O(prompt_len) launches per length group rather than
+        O(n_slots × prompt_len). Slots with different replay lengths
+        form separate lockstep groups (the shared scalar position
+        cannot advance past a shorter prompt's end).
+        """
+        by_len: dict[int, list[int]] = {}
+        for slot in slots:
+            n = len(self.slot_req[slot].prompt) - 1
+            if n > 0:
+                by_len.setdefault(n, []).append(slot)
+        for n, group in sorted(by_len.items()):
+            for t in range(n):
+                token = jnp.zeros((self.max_batch, 1), jnp.int32)
+                for slot in group:
+                    token = token.at[slot, 0].set(
+                        self.slot_req[slot].prompt[t]
+                    )
+                _, self.cache = self._decode(
+                    self.params, token, self.cache,
+                    jnp.asarray(t, jnp.int32),
+                )
+                for slot in group:
+                    self.slot_pos[slot] = t + 1
 
     def _step_slot(self, slot: int, tok: int) -> np.ndarray:
         """Single-slot cache update. Batched across slots in step(); this
@@ -118,9 +151,22 @@ class ServeEngine:
         return done
 
     def run_until_drained(self, max_ticks: int = 10_000) -> list[Completion]:
+        """Tick until every queued and in-flight request completes.
+
+        ``max_ticks`` bounds the loop; hitting the bound with work still
+        pending raises ``RuntimeError`` naming the undrained request
+        ids rather than silently returning a partial completion list
+        (regression-tested in ``tests/test_substrate.py``).
+        """
         out: list[Completion] = []
         for _ in range(max_ticks):
             out.extend(self.step())
             if self.queue.empty() and all(r is None for r in self.slot_req):
-                break
-        return out
+                return out
+        undrained = [r.rid for r in self.slot_req if r is not None]
+        undrained += [r.rid for r in list(self.queue.queue)]
+        raise RuntimeError(
+            f"run_until_drained hit max_ticks={max_ticks} with "
+            f"{len(undrained)} request(s) undrained (rids {undrained}); "
+            f"{len(out)} completion(s) were produced before the bound"
+        )

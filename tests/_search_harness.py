@@ -79,9 +79,9 @@ class ModelTimer:
         self.calls.append(plan)
         pred = self.model.evaluate(
             self.workload, plan.block_h, plan.m, d=plan.d,
-            double_buffer=plan.double_buffer,
+            double_buffer=plan.double_buffer, b=getattr(plan, "b", 1),
         ).sustained_gflops
-        sites = self.h * self.w * plan.steps
+        sites = self.h * self.w * plan.steps * getattr(plan, "b", 1)
         wall = sites * self.workload.flops_per_elem / (pred * 1e9)
         wall *= plan_noise(self.seed, plan.key(), self.noise)
         return wall / self.boost.get((plan.block_h, plan.m, plan.d), 1.0)

@@ -344,7 +344,7 @@ def test_search_result_schema(ex, sweep):
     assert d["budget_spent"] == res.budget_spent
     for m in d["measurements"]:
         assert set(m) == {"block_h", "m", "steps", "d", "reps",
-                          "double_buffer", "count"}
+                          "double_buffer", "b", "count"}
         assert m["count"] >= 1
     assert d["best"] == res.best.as_dict()
 

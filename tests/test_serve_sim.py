@@ -1,0 +1,303 @@
+"""Simulation-serving engine tests (DESIGN.md §13, docs/pipeline.md
+§serve): admission backpressure, trial-context grouping, batched
+member-wise bit-exactness against sequential runs, autotune-once via
+shared studies (zero live timings on the warm path, asserted with the
+injected deterministic timer), drain completeness, and the
+``SearchStepper`` non-blocking search contract.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+from _search_harness import ModelTimer, _rf
+from repro.apps import diffusion as dif
+from repro.apps import lbm
+from repro.serve.sim import PlanResolver, SimEngine, SimRequest
+
+STEPS = 8
+
+
+def _diffusion_tenant(h=32, w=32, alpha=0.2):
+    """(kernel, per-member state factory, regs) for a diffusion tenant."""
+    sim = dif.DiffusionSimulation(h, w, alpha=alpha)
+    u0, _ = dif.sine_init(h, w)
+    return (
+        sim.kernel,
+        lambda i: sim.state(u0 * (1.0 + 0.01 * i)),
+        (sim.alpha,),
+    )
+
+
+def _lbm_tenant(h=32, w=32):
+    sim = lbm.LBMSimulation(lbm.LBMProblem(h, w, mode="wrap"))
+    f0, attr, _ = lbm.taylor_green_init(h, w)
+    return (
+        sim.stream_kernel(),
+        lambda i: sim.stream_state(f0 * (1.0 + 0.01 * i), attr),
+        sim.stream_regs(),
+    )
+
+
+def _resolver(study_dir=None, **kw) -> PlanResolver:
+    """Small-lattice resolver; ``budget=0`` (the default here) pins the
+    model-predicted plan without a single live timing, so engine tests
+    spend no wall clock tuning unless they ask to."""
+    kw.setdefault("budget", 0)
+    kw.setdefault("b_values", (1, 2, 4))
+    kw.setdefault("bh_values", (8, 16, 32))
+    kw.setdefault("m_values", (1, 2, 4))
+    if study_dir is not None:
+        kw.setdefault("study_dir", str(study_dir))
+    return PlanResolver(**kw)
+
+
+# ---------------------- admission / backpressure ----------------------
+
+
+def test_submit_rejects_with_backpressure_when_queue_full():
+    kern, mk, regs = _diffusion_tenant()
+    eng = SimEngine(_resolver(), max_queue=2)
+    reqs = [
+        SimRequest(rid=i, core=kern, state=mk(i), steps=STEPS, regs=regs)
+        for i in range(4)
+    ]
+    assert eng.submit(reqs[0]) and eng.submit(reqs[1])
+    # queue full: rejected, counted, never silently dropped
+    assert not eng.submit(reqs[2]) and not eng.submit(reqs[3])
+    assert eng.rejected == 2 and eng.submitted == 2
+    done = eng.run_until_drained()
+    assert sorted(c.rid for c in done) == [0, 1]
+    stats = eng.stats()
+    assert stats["completed"] == stats["submitted"] == 2
+
+
+def test_drain_returns_every_accepted_request():
+    kern, mk, regs = _diffusion_tenant()
+    eng = SimEngine(_resolver())
+    for i in range(5):
+        assert eng.submit(SimRequest(rid=i, core=kern, state=mk(i),
+                                     steps=STEPS, regs=regs))
+    done = eng.run_until_drained()
+    assert sorted(c.rid for c in done) == list(range(5))
+    assert all(c.steps == STEPS for c in done)
+    assert eng._active_count() == 0 and not eng.queue
+
+
+def test_run_until_drained_raises_instead_of_truncating():
+    kern, mk, regs = _diffusion_tenant()
+    # m=1 forces one fused step per tick: 8 steps cannot drain in 2.
+    eng = SimEngine(_resolver(m_values=(1,)))
+    eng.submit(SimRequest(rid=7, core=kern, state=mk(0), steps=STEPS,
+                          regs=regs))
+    with pytest.raises(RuntimeError, match=r"undrained.*\[7\]"):
+        eng.run_until_drained(max_ticks=2)
+
+
+# ------------------------- context grouping ---------------------------
+
+
+def test_only_identical_contexts_share_a_launch():
+    """Same core fingerprint + grid but different Append_Reg values must
+    never stack into one launch (the SMEM scalars broadcast to every
+    batch member)."""
+    ka, mka, ra = _diffusion_tenant(alpha=0.2)
+    kb, mkb, rb = _diffusion_tenant(alpha=0.05)
+    eng = SimEngine(_resolver())
+    eng.submit(SimRequest(rid=0, core=ka, state=mka(0), steps=STEPS,
+                          regs=ra))
+    eng.submit(SimRequest(rid=1, core=ka, state=mka(0), steps=STEPS,
+                          regs=ra))
+    eng.submit(SimRequest(rid=2, core=kb, state=mkb(0), steps=STEPS,
+                          regs=rb))
+    eng.submit(SimRequest(rid=3, core=kb, state=mkb(0), steps=STEPS,
+                          regs=rb))
+    done = {c.rid: c for c in eng.run_until_drained()}
+    assert len(eng.groups) == 2  # one group per (fingerprint, regs)
+    assert len(eng.stats()["plans"]) == 2  # regs distinguish the keys
+    # b=4 was allowed, but no launch may ever exceed a context's own
+    # member count of 2
+    assert max(int(k) for k in eng.stats()["occupancy"]) <= 2
+    # identical initial states, different alpha: results must differ
+    # (no cross-context contamination), and same-context twins agree
+    assert np.array_equal(done[0].state, done[1].state)
+    assert not np.array_equal(done[0].state, done[2].state)
+
+
+# -------------------- batched bitwise correctness ---------------------
+
+
+@pytest.mark.parametrize("app", ["diffusion", "lbm"])
+@pytest.mark.parametrize("b", [1, 2, 4])
+def test_batched_members_bitmatch_sequential(app, b):
+    """Every member of a width-b engine launch retires with exactly the
+    state an independent ``run_blocked`` produces — the batch axis is
+    bitwise invisible (tests/test_streaming.py proves the kernel-level
+    half; this is the engine-path half, through cohort stacking, fused
+    chunking, and the single retirement transfer)."""
+    kern, mk, regs = (
+        _diffusion_tenant() if app == "diffusion" else _lbm_tenant()
+    )
+    eng = SimEngine(_resolver(b_values=(b,)))
+    for i in range(b):
+        eng.submit(SimRequest(rid=i, core=kern, state=mk(i),
+                              steps=STEPS, regs=regs))
+    done = {c.rid: c for c in eng.run_until_drained()}
+    assert len(done) == b
+    (plan,) = eng.stats()["plans"].values()
+    assert plan["b"] == b
+    # all members admitted before the first launch: full-width cohort
+    assert str(b) in eng.stats()["occupancy"]
+    for i in range(b):
+        ref = kern.run_blocked(
+            mk(i), regs, steps=STEPS, m=plan["m"],
+            block_h=plan["block_h"],
+            double_buffer=plan["double_buffer"], interpret=True,
+        )
+        assert np.array_equal(done[i].state, np.asarray(ref)), (
+            f"member {i}/{b} diverged from its sequential reference"
+        )
+
+
+# ----------------------- autotune-on-first-request --------------------
+
+
+def test_autotune_once_warm_engine_times_nothing(tmp_path):
+    """First engine tunes under its budget; a second engine over the
+    same study directory replays the journal and pins the identical
+    plan with zero live timings (the injected deterministic timer makes
+    'zero' exact, not statistical)."""
+    kern, mk, regs = _diffusion_tenant()
+
+    def engine(timer):
+        return SimEngine(_resolver(tmp_path, budget=3, timer=timer))
+
+    t1 = ModelTimer(h=32, w=32)
+    eng1 = engine(t1)
+    for i in range(2):
+        eng1.submit(SimRequest(rid=i, core=kern, state=mk(i),
+                               steps=STEPS, regs=regs))
+    eng1.run_until_drained()
+    s1 = eng1.stats()
+    assert 0 < s1["live_timings"] <= 3
+    assert len(t1.calls) == s1["live_timings"]
+    assert s1["tuning_ticks"] > 0
+
+    t2 = ModelTimer(h=32, w=32)
+    eng2 = engine(t2)
+    for i in range(2):
+        eng2.submit(SimRequest(rid=10 + i, core=kern, state=mk(i),
+                               steps=STEPS, regs=regs))
+    eng2.run_until_drained()
+    s2 = eng2.stats()
+    assert s2["live_timings"] == 0 and not t2.calls
+    assert s2["tuning_ticks"] == 0
+
+    (p1,) = s1["plans"].values()
+    (p2,) = s2["plans"].values()
+    assert p2["replayed"] > 0 and p2["budget_spent"] == 0
+    for field in ("block_h", "m", "d", "double_buffer", "b", "source"):
+        assert p1[field] == p2[field], field
+
+
+def test_budget_zero_falls_back_to_model_plan():
+    kern, mk, regs = _diffusion_tenant()
+    eng = SimEngine(_resolver(budget=0))
+    eng.submit(SimRequest(rid=0, core=kern, state=mk(0), steps=STEPS,
+                          regs=regs))
+    eng.run_until_drained()
+    (plan,) = eng.stats()["plans"].values()
+    assert plan["source"] == "model" and plan["budget_spent"] == 0
+    assert eng.stats()["live_timings"] == 0
+
+
+def test_reset_counters_opens_fresh_window_keeping_plans():
+    kern, mk, regs = _diffusion_tenant()
+    eng = SimEngine(_resolver())
+    eng.submit(SimRequest(rid=0, core=kern, state=mk(0), steps=STEPS,
+                          regs=regs))
+    eng.run_until_drained()
+    assert eng.stats()["launches"] > 0
+    eng.reset_counters()
+    s = eng.stats()
+    assert s["launches"] == s["member_steps"] == s["completed"] == 0
+    (plan,) = s["plans"].values()
+    assert plan is not None  # pinned plans survive the window reset
+
+
+# ------------------- model/legalizer batch-axis agreement -------------
+
+
+def test_vmem_pricing_and_model_agree_on_b():
+    from _search_harness import TOY
+    from repro.core.dse import TPUModel
+    from repro.core.legalize import stripe_vmem_bytes
+
+    v1 = stripe_vmem_bytes(16, 2, 128, 3, halo=1, double_buffer=True)
+    v4 = stripe_vmem_bytes(16, 2, 128, 3, halo=1, double_buffer=True,
+                           b=4)
+    assert v4 == 4 * v1  # stacked stripes price linearly in b
+
+    model = TPUModel()
+    p1 = model.evaluate(TOY, 8, 2)
+    p4 = model.evaluate(TOY, 8, 2, b=4)
+    assert p4.detail["b"] == 4
+    assert p4.detail["vmem_bytes"] == 4 * p1.detail["vmem_bytes"]
+
+    # batched + sharded geometry is declared infeasible, not mispriced
+    pd = model.evaluate(TOY, 8, 2, d=2, b=2)
+    assert not pd.feasible
+    assert any("batched" in lim for lim in pd.limits)
+
+
+# -------------------------- SearchStepper -----------------------------
+
+
+def _stepper_runner(hz, timer, budget):
+    from repro.core.dse import TPUModel
+    from repro.core.search import SearchRunner
+
+    return SearchRunner(
+        workload=hz.workload, grid_shape=(hz.h, hz.w), run_factory=_rf,
+        model=TPUModel(), fingerprint="toy", calibrate=False,
+        cache=False, timer=timer, budget=budget, max_devices=1,
+    )
+
+
+def test_search_stepper_nonblocking_contract(search_harness):
+    """The non-blocking contract the engine's tick loop relies on:
+    every step spends at most ONE live timing, the hard budget is never
+    exceeded, the loop terminates, and ``best()`` is the measured
+    argmax of everything explored. (The trial *sequence* may differ
+    from a blocking run — the trampoline replays prior measurements
+    from the dedupe table between steps — but it spends the identical
+    total budget.)"""
+    from repro.core.search import SearchStepper, TPESearch
+
+    hz = search_harness
+    sweep = hz.sweep()
+    budget = 5
+
+    blocking = _stepper_runner(hz, hz.timer(), budget)
+    TPESearch(seed=0, max_trials=budget).search(sweep, blocking)
+
+    timer = hz.timer()
+    stepped = _stepper_runner(hz, timer, budget)
+    stepper = SearchStepper(
+        TPESearch(seed=0, max_trials=budget), sweep, stepped
+    )
+    per_step = []
+    while not stepper.done:
+        before = stepped.budget_spent
+        stepper.step()
+        per_step.append(stepped.budget_spent - before)
+    assert all(n <= 1 for n in per_step)
+    assert stepped.budget_spent <= budget
+    assert stepped.budget_spent == blocking.budget_spent
+    assert len(timer.calls) == stepped.budget_spent
+
+    best = stepper.best()
+    assert best.measured_gflops == max(
+        e.measured_gflops for e in stepper.executed
+    )

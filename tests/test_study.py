@@ -240,7 +240,8 @@ def test_tpe_observes_violations_without_spending_budget(search_harness):
     assert executed == [] and runner.budget_spent == 0 and not timer.calls
     viols = st.violations_for(runner)
     assert viols and all(r["violation"] > 0.0 for r in viols)
-    assert all(len(r["coords"]) == 3 for r in viols)
+    # (block_h, m, d, b): the batch axis joined the candidate lattice
+    assert all(len(r["coords"]) == 4 for r in viols)
 
 
 # ----------------------- concurrency: nothing lost -----------------------

@@ -312,3 +312,23 @@ def test_serve_greedy_matches_forward():
         want = int(jnp.argmax(logits[0, -1]))
         assert t == want
         seq.append(t)
+
+
+def test_serve_run_until_drained_raises_instead_of_truncating():
+    """Hitting max_ticks with requests still pending must raise naming
+    the undrained rids, never silently return a partial list."""
+    import dataclasses
+
+    cfg = dataclasses.replace(
+        get_arch("qwen3-8b").reduced(), n_layers=2, d_model=64, vocab=97,
+        n_heads=2, n_kv_heads=2, head_dim=32,
+    )
+    bundle = registry.build(cfg)
+    params = bundle.init(jax.random.PRNGKey(0))
+    from repro.serve.engine import Request, ServeEngine
+
+    eng = ServeEngine(bundle, params, max_batch=1, max_seq=64)
+    eng.submit(Request(rid=3, prompt=[1, 2, 3], max_new_tokens=40))
+    eng.submit(Request(rid=4, prompt=[4, 5], max_new_tokens=40))
+    with pytest.raises(RuntimeError, match=r"undrained.*3"):
+        eng.run_until_drained(max_ticks=2)
