@@ -26,6 +26,11 @@ driven end-to-end by ``repro.core.explorer``:
    (docs/pipeline.md §study) whose convergence/Pareto report is written
    next to the JSON as ``BENCH_study.html`` / ``BENCH_study.txt`` —
    the CI bench job uploads it as an artifact.
+   A **stream-program sweep** (2h, docs/pipeline.md §program) then
+   clocks every fusion partition of the two program apps — fused vs
+   pipelined vs the unfused host-round-trip baseline — and hard-fails
+   if the calibrated model's partition pick measures >10% worse than
+   the best measured partition.
 3. LM mesh planner: (dp, tp, pp) ranking for a transformer arch — the
    paper's spatial/temporal trade lifted to the fleet (DESIGN.md §4).
 
@@ -298,6 +303,140 @@ def run(topk: int = 3, interpret: bool = True, reps: int = 3,
             "--xla_force_host_platform_device_count=8)"
         )
 
+    # 2h --------------------------------------------------------------
+    # Stream programs: the fusion partition as a measured axis
+    # (docs/pipeline.md §program, DESIGN.md §14). For each program app,
+    # clock every partition of the chain — fused (one pallas_call per
+    # m-step block), pipelined (chained on-device launches), and the
+    # naive unfused baseline (host round-trip per cluster) — then ask
+    # the calibrated model to pick a partition and hard-fail if its
+    # pick measures >10% worse than the best measured partition. The
+    # calibration gives the model this platform's throughput *and* its
+    # per-launch dispatch overhead (TPUTarget.launch_overhead_s, backed
+    # out of a tiny-grid probe where launches dominate the wall).
+    import dataclasses
+
+    from repro.apps.advection_diffusion import (
+        AdvectionDiffusionSimulation, blob_init,
+    )
+    from repro.core import measure as measure_mod
+    from repro.core.dse import TPUModel
+    from repro.core.measure import time_run
+    from repro.core.program import fusion_partitions, program_run_factory
+
+    out.append(
+        "\n## DSE sweep 2h: stream programs — fused vs pipelined vs "
+        "unfused (per app)"
+    )
+    program_bench: dict = {}
+    pg_h, pg_w = 128, 128
+    pg_bh, pg_m, pg_steps = 16, 2, 16
+    psim = lbm.LBMSimulation(lbm.LBMProblem(pg_h, pg_w, mode="wrap"))
+    pf, pattr, _ = lbm.taylor_green_init(pg_h, pg_w)
+    asim = AdvectionDiffusionSimulation(pg_h, pg_w)
+    for pname, prog, pstate, pregs in (
+        ("lbm_program", psim.program(), psim.stream_state(pf, pattr),
+         psim.stream_regs()),
+        ("advection_diffusion", asim.program,
+         asim.state(blob_init(pg_h, pg_w)), asim.regs()),
+    ):
+        specs = fusion_partitions(prog.nstages)
+        wl = prog.workload(pg_h * pg_w, grid_w=pg_w)
+        prf = program_run_factory(prog, pstate, pregs, interpret)
+        cal2h = measure_mod.calibrate_execution(
+            prf, workload=wl, grid_shape=(pg_h, pg_w), width=pg_w,
+            words=prog.P, interpret=interpret, reps=reps, warmup=1,
+        )
+        # Launch-overhead probe: the fully pipelined partition on a
+        # 16-row slab — per-launch dispatch dominates the wall there.
+        split = specs[-1]
+        nclusters = split.count("+") + 1
+        tiny = pstate[..., :16, :]
+        tiny_steps = 8
+        tp = time_run(
+            lambda: prog.kernel(split).run_blocked(
+                tiny, pregs, steps=tiny_steps, m=1, block_h=8,
+                interpret=interpret,
+            ),
+            reps=reps, warmup=1,
+        )
+        ovh = float(tp.wall_s) / (tiny_steps * nclusters)
+        model2h = TPUModel(dataclasses.replace(
+            cal2h.target(d=1), launch_overhead_s=ovh
+        ))
+        walls: dict = {}
+        for spec in specs:
+            pk = prog.kernel(spec)
+            timing = time_run(
+                lambda: pk.run_blocked(
+                    pstate, pregs, steps=pg_steps, m=pg_m, block_h=pg_bh,
+                    interpret=interpret,
+                ),
+                reps=reps, warmup=1,
+            )
+            walls[spec] = float(timing.wall_s)
+        unfused_t = time_run(
+            lambda: prog.kernel(split).run_unfused(
+                pstate, pregs, steps=pg_steps, block_h=pg_bh,
+                interpret=interpret,
+            ),
+            reps=reps, warmup=1,
+        )
+        pick = max(
+            specs,
+            key=lambda s: model2h.evaluate(
+                wl, pg_bh, pg_m, fusion=s
+            ).sustained_gflops,
+        )
+        best_measured = min(walls, key=walls.get)
+        for spec in specs:
+            tag = ("fused" if "+" not in spec else
+                   ("pipelined" if spec == split else "partial"))
+            out.append(
+                f"  {pname}: fusion={spec:<8s} {walls[spec]*1e3:8.2f} ms "
+                f"/{pg_steps} steps ({tag})"
+            )
+        out.append(
+            f"  {pname}: unfused  {float(unfused_t.wall_s)*1e3:8.2f} ms "
+            f"(host round-trip per cluster); model pick {pick!r}, best "
+            f"measured {best_measured!r} "
+            f"(launch overhead {ovh*1e6:.1f} us/launch)"
+        )
+        if walls[pick] > 1.10 * walls[best_measured]:
+            raise RuntimeError(
+                f"program sweep 2h: model-picked partition {pick!r} "
+                f"measured {walls[pick]*1e3:.2f} ms — more than 10% "
+                f"worse than the best measured partition "
+                f"{best_measured!r} at {walls[best_measured]*1e3:.2f} ms "
+                f"({pname})"
+            )
+        # Machine-independent trajectory record: the raw-model lattice
+        # best over the full fusion axis (same convention as the lbm/
+        # diffusion "best" blocks — measurements stay platform-bound).
+        pex = prog.explorer(pg_h * pg_w, grid_w=pg_w)
+        psw = pex.sweep_tpu(
+            bh_values=(8, 16, 32, 64), m_values=(1, 2, 4, 8),
+            fusion_values=specs,
+        )
+        pbest = psw.best("sustained_gflops")
+        program_bench[pname] = {
+            "grid": [pg_h, pg_w],
+            "block_h": pg_bh, "m": pg_m, "steps": pg_steps,
+            "partitions_s": walls,
+            "fused_s": walls[specs[0]],
+            "pipelined_s": walls[split],
+            "unfused_s": float(unfused_t.wall_s),
+            "model_pick": pick,
+            "best_measured": best_measured,
+            "launch_overhead_s": ovh,
+            "best": {
+                "fusion": str(pbest.detail["fusion"]),
+                "m": int(pbest.m),
+                "block_h": int(pbest.detail["block_rows"]),
+                "sustained_gflops": float(pbest.sustained_gflops),
+            },
+        }
+
     # Render the study's convergence/Pareto report next to the JSON —
     # the artifact the CI bench job uploads.
     study = Study.resume(study_name)
@@ -355,6 +494,7 @@ def run(topk: int = 3, interpret: bool = True, reps: int = 3,
             }
         bench["autotune"] = autotune
         bench["overlap"] = overlap_bench
+        bench["program"] = program_bench
         bench["study"] = {
             "name": study_name,
             "records": len(study.records),

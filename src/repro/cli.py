@@ -125,6 +125,15 @@ def explore_main(argv: list[str] | None = None) -> None:
                     help="cap on total tpe observations, replayed + "
                          "measured (a resumed study whose replays cover "
                          "N spends zero budget)")
+    ap.add_argument("--program", action="store_true",
+                    help="also search the multi-core stream programs "
+                         "(docs/pipeline.md §program): LBM as a 3-core "
+                         "collide+stream -> boundary -> moments chain "
+                         "and the 2-core advection-diffusion app, with "
+                         "the fusion partition (which stages share one "
+                         "pallas_call) swept as a lattice axis — the "
+                         "report table gains a `fuse` column and --json "
+                         "carries the partition per executed point")
     args = ap.parse_args(argv)
     d_values = device_axis_values(args.devices)
     report: dict = {"d_values": list(d_values)}
@@ -242,6 +251,49 @@ def explore_main(argv: list[str] | None = None) -> None:
         print(f"(inferred stencil: {len(halo.offsets)} offsets, "
               f"halo = {halo.halo_y} row/step — no hand-written kernel)")
         report["diffusion"] = dres.as_dict()
+
+        if args.program:
+            from repro.apps.advection_diffusion import (
+                AdvectionDiffusionSimulation, blob_init)
+            from repro.core.program import fusion_partitions
+
+            print()
+            print("=" * 72)
+            print("3c) Stream programs: the fusion partition as a "
+                  "search axis")
+            print("    (docs/pipeline.md §program; `fuse` column = "
+                  "cluster sizes, e.g. 2+1)")
+            print("=" * 72)
+            report["program"] = {}
+            psim = lbm.LBMSimulation(lbm.LBMProblem(128, 128, mode="wrap"))
+            pprog = psim.program()
+            pf, pattr, _ = lbm.taylor_green_init(128, 128)
+            asim = AdvectionDiffusionSimulation(128, 128)
+            for label, prog, state, regs in (
+                ("lbm_program", pprog,
+                 psim.stream_state(pf, pattr), psim.stream_regs()),
+                ("advection_diffusion", asim.program,
+                 asim.state(blob_init(128, 128)), asim.regs()),
+            ):
+                pex = prog.explorer(128 * 128, grid_w=128)
+                psweep = pex.sweep_tpu(
+                    bh_values=(8, 16, 32), m_values=(1, 2, 4),
+                    d_values=exec_d, double_buffer=args.double_buffer,
+                    fusion_values=fusion_partitions(prog.nstages),
+                )
+                pres = pex.search(
+                    psweep, state, regs, strategy=strategy,
+                    budget=args.budget, interpret=True, reps=args.reps,
+                    calibrate=args.calibrate, cache=mcache, **study_kw,
+                )
+                print(f"-- {label} ({prog.nstages} stages, partitions: "
+                      f"{', '.join(fusion_partitions(prog.nstages))})")
+                print(render_executed(pres.executed))
+                print(f"(strategy={pres.strategy}: {pres.budget_spent} "
+                      f"live measurement(s), {len(pres.executed)} "
+                      f"point(s) executed)")
+                report["program"][label] = pres.as_dict()
+
         report["measure"] = {
             "reps": args.reps,
             "calibrate": bool(args.calibrate),

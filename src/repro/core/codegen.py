@@ -89,7 +89,24 @@ class StencilSummary:
         return self.halo_y
 
 
-def _core_reads(compiled: CompiledCore) -> dict[str, set]:
+def _normalize_incoming(incoming, n: int) -> tuple:
+    """Canonical per-input ``(dy, dx)`` extents tuple for memo keys.
+
+    ``None`` (the single-core case: inputs arrive straight off the grid)
+    normalizes to all-zero extents — the same key as an explicit
+    all-zero request, so both spellings share one memo entry.
+    """
+    if incoming is None:
+        return ((0, 0),) * n
+    ext = tuple((int(dy), int(dx)) for dy, dx in incoming)
+    if len(ext) != n:
+        raise CodegenError(
+            f"incoming extents cover {len(ext)} inputs, core has {n}"
+        )
+    return ext
+
+
+def _core_reads(compiled: CompiledCore, incoming=None) -> dict[str, set]:
     """Per-output ``(input_index, dy, dx)`` read sets of one core.
 
     Abstract interpretation over the toposorted DFG: every variable
@@ -97,19 +114,43 @@ def _core_reads(compiled: CompiledCore) -> dict[str, set]:
     Indices are positions in ``core.input_ports()`` (main + brch + regs);
     register/param inputs are scalars and carry the empty set.
 
-    Memoized per compiled core: sub-cores are shared across call sites
-    (and cascades repeat the same PE m times), so without the cache the
-    walk would re-derive every callee's read set at every call site.
+    ``incoming`` is the per-main-input ``(dy, dx)`` extent the producer
+    edge applies before this core sees the stream (docs/pipeline.md
+    §program): input ``i`` seeds at ``(i, dy_i, dx_i)`` instead of
+    ``(i, 0, 0)``, so a program stage's summary composes its upstream
+    edge reach.
+
+    Memoized per (compiled core, incoming extents): sub-cores are shared
+    across call sites (and cascades repeat the same PE m times), so
+    without the cache the walk would re-derive every callee's read set
+    at every call site — and fusion clusters reuse one sub-core at
+    *different* incoming extents, so the memo must key on the pair, not
+    the core alone, or the second use would read the first use's stale
+    offsets.
     """
-    cached = getattr(compiled, "_stencil_reads", None)
+    core = compiled.core
+    key = _normalize_incoming(
+        incoming,
+        len(core.main_input_ports()) + len(core.brch_input_ports()),
+    )
+    memo = getattr(compiled, "_stencil_reads_memo", None)
+    if memo is None:
+        memo = {}
+        compiled._stencil_reads_memo = memo
+    cached = memo.get(key)
     if cached is not None:
         return cached
-    core = compiled.core
     alias = core.alias_map()
     main = set(core.main_input_ports()) | set(core.brch_input_ports())
     env: dict[str, set] = {}
+    stream_idx = 0
     for i, p in enumerate(core.input_ports()):
-        env[p] = {(i, 0, 0)} if p in main else set()
+        if p in main:
+            dy, dx = key[stream_idx]
+            stream_idx += 1
+            env[p] = {(i, dy, dx)}
+        else:
+            env[p] = set()
     for p in core.params:
         env[p] = set()
 
@@ -159,7 +200,7 @@ def _core_reads(compiled: CompiledCore) -> dict[str, set]:
                 env[o_var] = acc
 
     reads = {p: env[alias.get(p, p)] for p in core.output_ports()}
-    compiled._stencil_reads = reads
+    memo[key] = reads
     return reads
 
 
@@ -181,22 +222,35 @@ def _stencil_modes(compiled: CompiledCore) -> set:
     return modes
 
 
-def stencil_summary(compiled: CompiledCore) -> StencilSummary:
+def stencil_summary(compiled: CompiledCore,
+                    incoming=None) -> StencilSummary:
     """Infer the stencil footprint of a compiled core's DFG.
 
-    Walks the graph once (recursing into sub-cores, memoized per core)
-    and returns which input ports each output reads at which grid
-    offsets, plus the halo the temporal-blocking kernel must carry per
-    fused step. Cached on the compiled core: ``stream_halo``,
-    ``stream_kernel()`` and direct callers all share one walk.
+    Walks the graph once (recursing into sub-cores, memoized per
+    (core, incoming extents)) and returns which input ports each output
+    reads at which grid offsets, plus the halo the temporal-blocking
+    kernel must carry per fused step. Cached on the compiled core:
+    ``stream_halo``, ``stream_kernel()`` and direct callers all share
+    one walk. ``incoming`` composes producer-edge ``(dy, dx)`` extents
+    into the footprint (docs/pipeline.md §program) — a program stage's
+    effective halo is its own reach *through* the edge feeding it.
     """
-    cached = getattr(compiled, "_stencil_summary", None)
+    core = compiled.core
+    key = _normalize_incoming(
+        incoming,
+        len(core.main_input_ports()) + len(core.brch_input_ports()),
+    )
+    memo = getattr(compiled, "_stencil_summary_memo", None)
+    if memo is None:
+        memo = {}
+        compiled._stencil_summary_memo = memo
+    cached = memo.get(key)
     if cached is not None:
         return cached
-    names = compiled.core.input_ports()
+    names = core.input_ports()
     reads = {
         port: frozenset((names[i], dy, dx) for (i, dy, dx) in triples)
-        for port, triples in _core_reads(compiled).items()
+        for port, triples in _core_reads(compiled, key).items()
     }
     offsets = frozenset(
         (dy, dx) for triples in reads.values() for (_, dy, dx) in triples
@@ -208,7 +262,7 @@ def stencil_summary(compiled: CompiledCore) -> StencilSummary:
         halo_x=max((abs(dx) for _, dx in offsets), default=0),
         modes=frozenset(_stencil_modes(compiled)),
     )
-    compiled._stencil_summary = summary
+    memo[key] = summary
     return summary
 
 
@@ -364,6 +418,16 @@ class StreamKernel:
             static_argnames=("m", "block_h", "double_buffer", "interpret"),
         )
         self._sharded: dict[int, object] = {}
+        # jit'd so the steps//m launch loop compiles once per plan shape
+        # and is reused across calls (an eager lax.fori_loop over a fresh
+        # closure would re-lower the whole loop on every invocation —
+        # which is also what makes fused vs. pipelined program walls in
+        # benchmarks/dse_sweep.py §2h an apples-to-apples comparison).
+        self._run_blocked = jax.jit(
+            self._run_blocked_impl,
+            static_argnames=("steps", "m", "block_h", "double_buffer",
+                             "interpret"),
+        )
         # jit'd so XLA applies the same mul-add contractions as inside the
         # kernel: this is what makes the bit-match contract hold exactly.
         self._reference = jax.jit(self._reference_impl, static_argnames=("m",))
@@ -418,12 +482,20 @@ class StreamKernel:
                     m: int, block_h: int, double_buffer: bool = True,
                     interpret: bool = True):
         """Advance ``steps`` time steps using m-fused kernel launches."""
+        return self._run_blocked(
+            state, self._scal(regs), steps=int(steps), m=int(m),
+            block_h=int(block_h), double_buffer=bool(double_buffer),
+            interpret=bool(interpret),
+        )
+
+    def _run_blocked_impl(self, state, scal, *, steps, m, block_h,
+                          double_buffer, interpret):
         from repro.kernels.spd_stream.ops import stream_run_blocked
 
         return stream_run_blocked(
             functools.partial(self._streamed, double_buffer=double_buffer),
-            state, self._scal(regs), steps=steps, m=m,
-            block_h=block_h, interpret=interpret,
+            state, scal, steps=steps, m=m, block_h=block_h,
+            interpret=interpret,
         )
 
     def sharded(self, d: int, devices: Sequence | None = None):

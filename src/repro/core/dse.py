@@ -39,7 +39,12 @@ from typing import Iterable, Sequence
 
 import numpy as np
 
-from .legalize import VMEM_BYTES, stripe_vmem_bytes
+from .legalize import (
+    VMEM_BYTES,
+    cluster_vmem_bytes,
+    parse_fusion,
+    stripe_vmem_bytes,
+)
 
 # --------------------------------------------------------------------------
 # Workload description
@@ -63,6 +68,13 @@ class StreamWorkload:
     # halo-recompute terms use it, so the model and the kernel legalizer
     # (repro.core.legalize) account the same stripe geometry.
     halo: int = 1
+    # Stream-program stage chain (docs/pipeline.md §program, DESIGN.md
+    # §14): per-stage ``(flops_per_elem, words, halo)`` triples in chain
+    # order, produced by ``StreamProgram.workload``. Empty for a
+    # single-core workload. When present, ``TPUModel.evaluate(...,
+    # fusion=)`` prices fusion partitions cluster by cluster — the
+    # totals above stay the fully-fused aggregates.
+    stages: tuple = ()
 
     @classmethod
     def from_report(cls, report, elems: int, grid_w: int = 0) -> "StreamWorkload":
@@ -77,6 +89,30 @@ class StreamWorkload:
             grid_w=grid_w,
             halo=getattr(report, "halo", 1),
         )
+
+    def fusion_clusters(self, fusion: str = "") -> list[dict]:
+        """Partition ``stages`` into fusion clusters (docs/pipeline.md
+        §program): each cluster dict carries its aggregate ``flops``,
+        member ``words``/``halos`` lists and the *composed* halo (the
+        sum of member halos — the legalizer's rule). Raises if the
+        workload carries no stage chain."""
+        if not self.stages:
+            raise ValueError(
+                f"workload {self.name!r} has no program stages; "
+                "fusion pricing needs StreamProgram.workload(...)"
+            )
+        sizes = parse_fusion(fusion, len(self.stages))
+        out, lo = [], 0
+        for s in sizes:
+            members = self.stages[lo:lo + s]
+            lo += s
+            out.append({
+                "flops": sum(int(f) for f, _, _ in members),
+                "words": [int(w) for _, w, _ in members],
+                "halos": [int(h) for _, _, h in members],
+                "halo": sum(int(h) for _, _, h in members),
+            })
+        return out
 
 
 @dataclass
@@ -370,6 +406,13 @@ class TPUTarget:
     # are stated in DESIGN.md §5 and only rank points, they are not claims.)
     chip_idle_w: float = 75.0
     chip_peak_w: float = 170.0
+    # Fixed dispatch latency per *extra* kernel launch in an m-step
+    # block (DESIGN.md §14): a fused cluster is one launch per block, a
+    # pipelined k-cluster program is m·k — the roofline alone cannot
+    # separate them when memory is cheap. 0.0 keeps every single-launch
+    # prediction bit-identical; benchmarks/dse_sweep.py §2h calibrates
+    # it from a tiny-grid probe through the real execution path.
+    launch_overhead_s: float = 0.0
 
 
 class TPUModel:
@@ -409,21 +452,37 @@ class TPUModel:
         d: int = 1,
         double_buffer: bool = True,
         b: int = 1,
+        fusion: str = "",
     ) -> DesignPoint:
-        """One (block_h, m, d, b) design point. ``d`` is the device axis —
-        the number of chips the grid is sharded across along y
-        (docs/pipeline.md §distribute); ``b`` the batch axis — the
-        number of independent simulations stacked into one launch
+        """One (block_h, m, d, b, fusion) design point. ``d`` is the
+        device axis — the number of chips the grid is sharded across
+        along y (docs/pipeline.md §distribute); ``b`` the batch axis —
+        the number of independent simulations stacked into one launch
         (docs/pipeline.md §serve): compute, HBM traffic and VMEM
         residency all scale linearly with ``b``, and the VMEM term is
         priced by the legalizer's own ``stripe_vmem_bytes(..., b=b)``
-        so modeled and executed geometry agree."""
+        so modeled and executed geometry agree.
+
+        ``fusion`` prices a stream-program partition (docs/pipeline.md
+        §program, DESIGN.md §14; needs ``w.stages``). Fused (one
+        cluster): one HBM pass per m-step block, stripes summed at the
+        composed halo — more VMEM, less traffic. Pipelined (k > 1
+        clusters): every *cut* edge costs a full-grid HBM write + read
+        per program step — ``m·k`` passes per m-step block — while each
+        cluster's temporal block collapses to one step (halo recompute
+        shrinks) and VMEM holds only the largest cluster's stripes.
+        """
         t = self.target
         d = int(d)
         b = max(1, int(b))
         pt = DesignPoint(n=d, m=m, feasible=True)
         grid_w = w.grid_w or int(math.sqrt(w.elems))
         bytes_per_elem = 4 * (w.words_in + w.words_out)
+        clusters = w.fusion_clusters(fusion) if w.stages else None
+        fusion = (
+            "+".join(str(s) for s in parse_fusion(fusion, len(w.stages)))
+            if w.stages else ""
+        )
 
         # The device axis decomposes the grid along y into d equal shards
         # (halo-exchanged over ICI). A height d does not divide has no
@@ -441,13 +500,25 @@ class TPUModel:
             pt.limits.append(f"batched b={b} + sharded d={d} unsupported")
 
         # VMEM residency: priced by the legalizer's own stripe formula
-        # (repro.core.legalize.stripe_vmem_bytes) — one source of truth,
-        # so a feasible point is never silently shrunk at run time and
-        # model/legalizer budgets cannot drift apart.
-        vmem = stripe_vmem_bytes(
-            bh, m, grid_w, w.words_in, halo=w.halo,
-            double_buffer=double_buffer, b=b,
-        )
+        # (repro.core.legalize) — one source of truth, so a feasible
+        # point is never silently shrunk at run time and model/legalizer
+        # budgets cannot drift apart. Programs price each cluster's
+        # stripe *set* at its composed halo and keep the max (clusters
+        # launch one at a time).
+        if clusters is None:
+            vmem = stripe_vmem_bytes(
+                bh, m, grid_w, w.words_in, halo=w.halo,
+                double_buffer=double_buffer, b=b,
+            )
+        else:
+            m_c = m if len(clusters) == 1 else 1
+            vmem = max(
+                cluster_vmem_bytes(
+                    bh, m_c, grid_w, c["words"], c["halos"],
+                    double_buffer, b=b,
+                )
+                for c in clusters
+            )
         if vmem > t.vmem_bytes:
             pt.feasible = False
             pt.limits.append(f"VMEM {vmem}>{t.vmem_bytes}")
@@ -455,17 +526,51 @@ class TPUModel:
         # Halo overhead: the 2·m·halo halo rows are recomputed per block.
         # The batch axis multiplies sites (b independent grids advance
         # per launch), leaving the useful fraction unchanged.
-        useful = bh / (bh + 2 * m * w.halo)
-        flops = b * w.elems * w.flops_per_elem * m / useful  # incl. recompute
+        if clusters is None:
+            useful = bh / (bh + 2 * m * w.halo)
+            flops = b * w.elems * w.flops_per_elem * m / useful
+            hbm_passes = 1
+            launches = 1
+            exch_halo = m * w.halo  # halo rows exchanged per m-step block
+        else:
+            m_c = m if len(clusters) == 1 else 1
+            # Per-cluster recompute at the cluster's composed halo; the
+            # cluster fuses m_c steps (m when fused, 1 per launch when
+            # pipelined — a program step is one pass through the chain).
+            launches = m // m_c  # cluster launches per m-step block
+            flops = sum(
+                b * w.elems * c["flops"] * launches * m_c
+                / (bh / (bh + 2 * m_c * c["halo"]))
+                for c in clusters
+            )
+            useful = (b * w.elems * w.flops_per_elem * m) / flops
+            # Every cut edge costs a full-grid HBM write + read per
+            # program step: k clusters = m·k grid passes per m-step
+            # block vs the fused path's single pass.
+            hbm_passes = 1 if len(clusters) == 1 else m * len(clusters)
+            exch_halo = sum(
+                launches * m_c * c["halo"] for c in clusters
+            )
+            launches = launches * len(clusters)  # total per m-step block
         t_compute = flops / (d * t.vpu_f32_tflops * 1e12)
-        t_memory = b * w.elems * bytes_per_elem / (d * t.hbm_gbs * 1e9)
-        # Cross-chip halo exchange (spatial split): 2·m·halo rows/neighbor.
+        t_memory = (
+            hbm_passes * b * w.elems * bytes_per_elem
+            / (d * t.hbm_gbs * 1e9)
+        )
+        # Cross-chip halo exchange (spatial split): 2·m·halo rows/neighbor
+        # (per cluster launch for pipelined programs).
         halo_bytes = 0.0
         if d > 1:
-            halo_bytes = 2 * 2 * m * w.halo * grid_w * w.words_in * 4
+            halo_bytes = 2 * 2 * exch_halo * grid_w * w.words_in * 4
         t_coll = halo_bytes / (t.ici_gbs_per_link * 1e9)
 
-        step_time = max(t_compute, t_memory, t_coll)
+        # Dispatch latency for the launches beyond the first: 0 for
+        # every single-launch block (legacy predictions unchanged),
+        # (m·k - 1)·overhead for a pipelined k-cluster program — the
+        # term that separates fused from pipelined once calibration has
+        # made HBM cheap (DESIGN.md §14).
+        t_launch = (launches - 1) * t.launch_overhead_s
+        step_time = max(t_compute, t_memory, t_coll) + t_launch
         useful_flops = b * w.elems * w.flops_per_elem * m
         sustained = useful_flops / step_time / 1e9 if step_time > 0 else 0.0
         peak = d * t.vpu_f32_tflops * 1e3  # GFlop/s
@@ -496,6 +601,10 @@ class TPUModel:
             "d": d,
             "double_buffer": bool(double_buffer),
             "b": b,
+            "fusion": fusion,
+            "hbm_passes": hbm_passes,
+            "launches": launches,
+            "t_launch_s": t_launch,
         }
         return pt
 
@@ -507,6 +616,7 @@ class TPUModel:
         d=1,
         double_buffer: bool = True,
         b=1,
+        fusion: str = "",
     ) -> dict[str, np.ndarray]:
         """Vectorized :meth:`evaluate` over ``bh``/``m``/``d``/``b`` arrays.
 
@@ -514,7 +624,10 @@ class TPUModel:
         in the broadcast shape, numerically identical to the scalar path.
         ``d`` is the device axis; the returned dict carries it under both
         ``"n"`` and ``"d"``. ``b`` is the batch axis (docs/pipeline.md
-        §serve), returned under ``"b"``.
+        §serve), returned under ``"b"``. ``fusion`` is one partition
+        spec for the whole lattice slab (the sweep loops over specs and
+        concatenates, docs/pipeline.md §program); it is returned under
+        ``"fusion"`` as an object column.
         """
         t = self.target
         bh = np.asarray(bh, dtype=np.int64)
@@ -524,11 +637,26 @@ class TPUModel:
         bh, m, chips, batch = np.broadcast_arrays(bh, m, chips, batch)
         grid_w = w.grid_w or int(math.sqrt(w.elems))
         bytes_per_elem = 4 * (w.words_in + w.words_out)
-
-        vmem = stripe_vmem_bytes(
-            bh, m, grid_w, w.words_in, halo=w.halo,
-            double_buffer=double_buffer, b=batch,
+        clusters = w.fusion_clusters(fusion) if w.stages else None
+        fusion = (
+            "+".join(str(s) for s in parse_fusion(fusion, len(w.stages)))
+            if w.stages else ""
         )
+
+        if clusters is None:
+            vmem = stripe_vmem_bytes(
+                bh, m, grid_w, w.words_in, halo=w.halo,
+                double_buffer=double_buffer, b=batch,
+            )
+        else:
+            m_c = np.where(len(clusters) == 1, m, 1)
+            vmem = np.maximum.reduce([
+                cluster_vmem_bytes(
+                    bh, m_c, grid_w, c["words"], c["halos"],
+                    double_buffer, b=batch,
+                )
+                for c in clusters
+            ])
         feasible = vmem <= t.vmem_bytes
         if w.grid_w:
             # y-sharding needs d equal shards (same check as the scalar
@@ -538,16 +666,45 @@ class TPUModel:
         # batched + sharded has no executable geometry (scalar path's limit)
         feasible = feasible & ((batch == 1) | (chips == 1))
 
-        useful = bh / (bh + 2 * m * w.halo)
-        flops = batch * w.elems * w.flops_per_elem * m / useful
+        if clusters is None:
+            useful = bh / (bh + 2 * m * w.halo)
+            flops = batch * w.elems * w.flops_per_elem * m / useful
+            hbm_passes = np.ones_like(m, dtype=np.float64)
+            launches = np.ones_like(m, dtype=np.float64)
+            exch_halo = (m * w.halo).astype(np.float64)
+        else:
+            m_c = np.where(len(clusters) == 1, m, 1)
+            launches = m // m_c
+            flops = sum(
+                batch * w.elems * c["flops"] * launches * m_c
+                / (bh / (bh + 2 * m_c * c["halo"]))
+                for c in clusters
+            )
+            useful = (batch * w.elems * w.flops_per_elem * m) / flops
+            hbm_passes = np.where(
+                len(clusters) == 1, 1.0, (m * len(clusters)).astype(np.float64)
+            )
+            exch_halo = sum(
+                (launches * m_c * c["halo"]).astype(np.float64)
+                for c in clusters
+            )
+            launches = (launches * len(clusters)).astype(np.float64)
         t_compute = flops / (chips * t.vpu_f32_tflops * 1e12)
-        t_memory = batch * w.elems * bytes_per_elem / (chips * t.hbm_gbs * 1e9)
+        t_memory = (
+            hbm_passes * batch * w.elems * bytes_per_elem
+            / (chips * t.hbm_gbs * 1e9)
+        )
         halo_bytes = np.where(
-            chips > 1, 2.0 * 2 * m * w.halo * grid_w * w.words_in * 4, 0.0
+            chips > 1, 2.0 * 2 * exch_halo * grid_w * w.words_in * 4, 0.0
         )
         t_coll = halo_bytes / (t.ici_gbs_per_link * 1e9)
 
-        step_time = np.maximum(np.maximum(t_compute, t_memory), t_coll)
+        # Same launch-dispatch term as the scalar path (0 when
+        # launches == 1, so legacy slabs are numerically unchanged).
+        step_time = (
+            np.maximum(np.maximum(t_compute, t_memory), t_coll)
+            + (launches - 1) * t.launch_overhead_s
+        )
         useful_flops = batch * w.elems * w.flops_per_elem * m
         sustained = np.where(step_time > 0, useful_flops / step_time / 1e9, 0.0)
         peak = chips * t.vpu_f32_tflops * 1e3
@@ -579,6 +736,8 @@ class TPUModel:
             "arithmetic_intensity": m * w.flops_per_elem / bytes_per_elem,
             "bound": bound,
             "resource_frac": vmem / t.vmem_bytes,
+            "fusion": np.full(bh.shape, fusion, dtype=object),
+            "launches": launches,
         }
 
     def explore(

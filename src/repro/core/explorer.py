@@ -204,6 +204,8 @@ class Sweep:
         kwargs = dict(self.scalar_kwargs)
         if "b" in self.data:  # batch-axis sweeps (docs/pipeline.md §serve)
             kwargs["b"] = int(self.data["b"][i])
+        if "fusion" in self.data:  # program sweeps (docs/pipeline.md §program)
+            kwargs["fusion"] = str(self.data["fusion"][i])
         return self.model.evaluate(
             self.workload,
             int(self.data["block_rows"][i]),
@@ -298,8 +300,9 @@ class Explorer:
         d_values: Sequence[int] = (1, 2, 4),
         double_buffer: bool = True,
         b_values: Sequence[int] = (1,),
+        fusion_values: Sequence[str] = ("",),
     ) -> Sweep:
-        """Evaluate the (block_h, m, d[, b]) lattice in one batched call.
+        """Evaluate the (block_h, m, d[, b][, fusion]) lattice batched.
 
         ``d`` is the device axis — chips the grid is sharded across
         along y (docs/pipeline.md §distribute). ``double_buffer``
@@ -307,7 +310,12 @@ class Explorer:
         ``Sweep.point`` re-materialization. ``b_values`` adds the batch
         axis — independent simulations stacked into one launch
         (docs/pipeline.md §serve); the default keeps the classic 3-D
-        lattice.
+        lattice. ``fusion_values`` adds the program fusion-partition
+        axis (docs/pipeline.md §program): one sub-lattice per spec,
+        concatenated, with the spec carried per point in
+        ``data["fusion"]`` — only meaningful when the workload has
+        program ``stages``; the ``("",)`` default keeps single-core
+        sweeps unchanged.
         """
         bh, m, d, b = np.meshgrid(
             np.asarray(bh_values, np.int64),
@@ -316,10 +324,21 @@ class Explorer:
             np.asarray(b_values, np.int64),
             indexing="ij",
         )
-        data = self.tpu.evaluate_batch(
-            self.workload, bh.ravel(), m.ravel(), d=d.ravel(),
-            double_buffer=double_buffer, b=b.ravel(),
-        )
+        chunks = [
+            self.tpu.evaluate_batch(
+                self.workload, bh.ravel(), m.ravel(), d=d.ravel(),
+                double_buffer=double_buffer, b=b.ravel(),
+                fusion=str(spec),
+            )
+            for spec in fusion_values
+        ]
+        if len(chunks) == 1:
+            data = chunks[0]
+        else:
+            data = {
+                k: np.concatenate([c[k] for c in chunks])
+                for k in chunks[0]
+            }
         return Sweep(
             "tpu", self.workload, self.tpu, data,
             scalar_kwargs={"double_buffer": double_buffer},
@@ -438,8 +457,10 @@ class Explorer:
             )
         halo = sweep.workload.halo
         fingerprint = cache_tag
+        stages = None
         if run_factory is None:
             from .codegen import StreamKernel
+            from .program import StreamProgram, program_run_factory
 
             core = core if core is not None else self.core
             if core is None:
@@ -447,18 +468,35 @@ class Explorer:
                     "Explorer.search needs a compiled core: build the "
                     "explorer from a CompiledCore or pass core=..."
                 )
-            kern = (
-                core if isinstance(core, StreamKernel)
-                else core.stream_kernel()
-            )
-            words, h, w = state.shape
-            halo, width = kern.halo, w
-            # The DFG fingerprint always wins on this path — a cache_tag
-            # must never alias two structurally different cores onto one
-            # cache key (stale hits); tags are for run_factory back ends
-            # that have no SPD core to hash.
-            fingerprint = measure.core_fingerprint(kern)
-            run_factory = kernel_run_factory(kern, state, regs, interpret)
+            if isinstance(core, StreamProgram):
+                # Program back end (docs/pipeline.md §program): plans
+                # legalize through the fused-cluster accounting and each
+                # point's fusion spec picks the ProgramKernel partition.
+                # The fingerprint is the fused monolithic wrapper's —
+                # it hashes every member core's DFG.
+                words, h, w = state.shape
+                width = w
+                stages = core.stage_geometry()
+                fingerprint = measure.core_fingerprint(
+                    core.monolithic_kernel()
+                )
+                run_factory = program_run_factory(
+                    core, state, regs, interpret
+                )
+            else:
+                kern = (
+                    core if isinstance(core, StreamKernel)
+                    else core.stream_kernel()
+                )
+                words, h, w = state.shape
+                halo, width = kern.halo, w
+                # The DFG fingerprint always wins on this path — a
+                # cache_tag must never alias two structurally different
+                # cores onto one cache key (stale hits); tags are for
+                # run_factory back ends that have no SPD core to hash.
+                fingerprint = measure.core_fingerprint(kern)
+                run_factory = kernel_run_factory(kern, state, regs,
+                                                 interpret)
         else:
             if grid_shape is None:
                 raise ValueError("run_factory needs grid_shape=(h, w)")
@@ -479,6 +517,7 @@ class Explorer:
             halo=halo,
             width=width,
             words=words,
+            stages=stages,
             steps=steps,
             interpret=interpret,
             reps=reps,
@@ -602,17 +641,20 @@ def render_executed(points: Sequence[ExecutedPoint]) -> str:
     (``-`` when calibration was off); ``rel err`` diffs against it when
     present (docs/pipeline.md §measure). ``src`` is ``cache`` when the
     wall time came from the measurement cache (or this search already
-    timed the same plan).
+    timed the same plan). ``fuse`` is the program fusion partition the
+    point ran as (docs/pipeline.md §program) — ``-`` for single-core
+    plans.
     """
     head = (
-        "| block_h | m | d | db | steps | model GF/s | calib GF/s "
+        "| block_h | m | d | db | fuse | steps | model GF/s | calib GF/s "
         "| measured GF/s | MLUPS | rel err | src | mode |\n"
-        "|---------|---|---|----|-------|------------|------------"
+        "|---------|---|---|----|------|-------|------------|------------"
         "|---------------|-------|---------|-----|------|"
     )
     rows = [
         f"| {e.block_h} | {e.m} | {e.d} | "
-        f"{'pp' if e.double_buffer else '1b'} | {e.steps} | "
+        f"{'pp' if e.double_buffer else '1b'} | "
+        f"{e.fusion or '-'} | {e.steps} | "
         f"{e.predicted_gflops:10.1f} | "
         + (f"{e.calibrated_gflops:10.4g}" if e.calibrated_gflops is not None
            else f"{'-':>10}")

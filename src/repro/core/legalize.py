@@ -39,9 +39,30 @@ stripe accounting scales linearly — ``b × stripe_vmem_bytes(..., b=1)``
 — single-sourced here so the serving engine's batched plans and the
 model's feasibility mask (``TPUModel.evaluate``) price the identical
 geometry.
+
+``fusion`` is the program-graph plan dimension (docs/pipeline.md
+§program, DESIGN.md §14): a multi-stage stream program partitions its
+stage chain into *fusion clusters* — ``"3"`` fuses three stages into
+one stripe body, ``"1+2"`` cuts after the first stage, ``"1+1+1"``
+pipelines every stage as its own launch. A fused cluster's composed
+halo is the **sum** of its member stages' per-step stencil extents, and
+its stripe residency is the **sum** of the member stages' stripes at
+that composed halo (:func:`cluster_vmem_bytes`), so
+:func:`program_blocking_plan` legalizes the whole partition against the
+same ``VMEM_BYTES`` budget a single core uses. The empty string is the
+legacy single-core plan.
+
+Plan identity is single-sourced here as :data:`PLAN_FIELDS` /
+:class:`RunPlan` (mirroring ``EXECUTED_POINT_FIELDS``): the search
+runner, the study journal, and the measurement cache all derive their
+keys from ``RunPlan.key()`` / ``RunPlan.from_dict``, so adding a plan
+dimension (as ``fusion`` was) is a one-line change here rather than a
+drift across call sites.
 """
 
 from __future__ import annotations
+
+from dataclasses import dataclass, fields
 
 #: TPU v5e on-chip vector memory (VMEM) capacity in bytes. Single source of
 #: truth for the DSE model (``TPUTarget.vmem_bytes``) and the legalizer.
@@ -52,6 +73,95 @@ VMEM_BYTES = 128 * 1024 * 1024
 #: Single source of truth: ``TPUModel`` and the legalizer both call
 #: :func:`stripe_vmem_bytes` rather than re-implementing this multiplier.
 VMEM_DOUBLE_BUFFER = 2
+
+#: The one definition of plan identity, in dataclass-field order
+#: (mirrors ``EXECUTED_POINT_FIELDS`` in ``repro.core.search``). The
+#: study journal, measurement-cache keys, and strategy dedupe tables all
+#: derive their tuples from :class:`RunPlan` over these fields, so a new
+#: plan dimension is added *here* and nowhere else.
+PLAN_FIELDS = (
+    "block_h", "m", "steps", "d", "reps", "double_buffer", "b", "fusion",
+)
+
+
+@dataclass(frozen=True)
+class RunPlan:
+    """One concrete, legalized measurement plan — the unit of identity
+    for the in-run dedupe table, the measurement cache, and the study
+    journal (docs/pipeline.md §legalize, §study).
+
+    ``fusion`` is the program-graph partition spec (docs/pipeline.md
+    §program) — ``""`` for single-core plans, ``"2+1"``-style cluster
+    sizes for stream programs — carried as plan identity so a fused and
+    a pipelined execution of the same lattice point are distinct
+    measurements.
+    """
+
+    block_h: int
+    m: int
+    steps: int
+    d: int
+    reps: int
+    double_buffer: bool = True
+    b: int = 1
+    fusion: str = ""
+
+    def key(self) -> tuple:
+        """Hashable identity tuple, ordered exactly as PLAN_FIELDS."""
+        return (self.block_h, self.m, self.steps, self.d, self.reps,
+                bool(self.double_buffer), self.b, self.fusion)
+
+    def as_dict(self) -> dict:
+        return {
+            "block_h": self.block_h, "m": self.m, "steps": self.steps,
+            "d": self.d, "reps": self.reps,
+            "double_buffer": bool(self.double_buffer), "b": self.b,
+            "fusion": self.fusion,
+        }
+
+    @classmethod
+    def from_dict(cls, rec: dict) -> "RunPlan":
+        """Rebuild a plan from a journal/report record, tolerating
+        records written before newer plan dimensions existed (absent
+        ``double_buffer``/``b``/``fusion`` take their defaults)."""
+        return cls(
+            block_h=int(rec["block_h"]), m=int(rec["m"]),
+            steps=int(rec["steps"]), d=int(rec["d"]),
+            reps=int(rec.get("reps", 1)),
+            double_buffer=bool(rec.get("double_buffer", True)),
+            b=int(rec.get("b", 1)),
+            fusion=str(rec.get("fusion", "") or ""),
+        )
+
+
+assert tuple(f.name for f in fields(RunPlan)) == PLAN_FIELDS
+
+
+def parse_fusion(spec: str, nstages: int) -> tuple[int, ...]:
+    """Parse a fusion partition spec into a tuple of cluster sizes.
+
+    ``"3"`` → ``(3,)`` (fully fused), ``"1+2"`` → ``(1, 2)``,
+    ``"1+1+1"`` → fully pipelined; ``""`` means fully fused (the
+    default for a program, and the only spelling for ``nstages == 1``).
+    Sizes must be positive and sum to ``nstages`` — a spec for the
+    wrong program shape is a hard error, not a closest-legal fallback.
+    """
+    if nstages < 1:
+        raise ValueError(f"program needs >= 1 stage, got {nstages}")
+    if not spec:
+        return (nstages,)
+    try:
+        sizes = tuple(int(part) for part in str(spec).split("+"))
+    except ValueError:
+        raise ValueError(f"malformed fusion spec {spec!r}") from None
+    if any(s < 1 for s in sizes):
+        raise ValueError(f"fusion spec {spec!r} has a non-positive cluster")
+    if sum(sizes) != nstages:
+        raise ValueError(
+            f"fusion spec {spec!r} partitions {sum(sizes)} stages, "
+            f"program has {nstages}"
+        )
+    return sizes
 
 
 def stripe_vmem_bytes(block_h, m, width: int, words: int,
@@ -298,10 +408,134 @@ def constraint_violation(h: int, block_h: int, m: int, *, halo: int = 1,
     return (need - vmem_bytes) / vmem_bytes
 
 
+def cluster_vmem_bytes(block_h, m, width: int, stage_words,
+                       stage_halos, double_buffer: bool = True,
+                       b: int = 1):
+    """VMEM bytes of one fusion cluster's stripe set (docs/pipeline.md
+    §program, DESIGN.md §14).
+
+    A fused cluster evaluates its member stages inside one stripe body,
+    so every member stage's field set stays stripe-resident at once: the
+    residency is the **sum** of the member stages' stripes, each priced
+    at the cluster's *composed* halo — the sum of the members' per-step
+    stencil extents, since stage k's reads reach through every upstream
+    member's stencil. ``stage_words``/``stage_halos`` are the member
+    stages' field counts and per-step halos, in chain order.
+    """
+    halo_c = sum(int(x) for x in stage_halos)
+    return sum(
+        stripe_vmem_bytes(block_h, m, width, int(w), halo_c,
+                          double_buffer, b=b)
+        for w in stage_words
+    )
+
+
+def program_blocking_plan(h: int, block_h: int, m: int, *,
+                          stages, fusion: str = "", width: int = 0,
+                          vmem_bytes: int = VMEM_BYTES, d: int = 1,
+                          double_buffer: bool = True,
+                          b: int = 1) -> tuple[int, int, bool]:
+    """Legalize a (block_h, m) plan for a stream *program* under a
+    fusion partition (docs/pipeline.md §program, DESIGN.md §14).
+
+    ``stages`` is the program's stage chain as ``(words, halo)`` pairs;
+    ``fusion`` partitions it into clusters (:func:`parse_fusion`). Every
+    cluster must satisfy the single-core constraints at its *composed*
+    halo — block divides the shard, the cluster's fused steps can source
+    their halo, and the cluster's stripe set
+    (:func:`cluster_vmem_bytes`) fits the shared budget; the returned
+    plan is the closest one legal for **all** clusters at once.
+
+    Temporal blocking only applies within a single launch, so a
+    single-cluster (fully fused) partition blocks ``m`` steps per HBM
+    round trip while a multi-cluster (pipelined) partition launches each
+    cluster at one program step at a time — the per-cluster fused-step
+    count is ``m`` iff the partition has one cluster, else 1. A
+    partition with no legal block raises a ``ValueError`` naming the
+    offending cluster (better than an opaque on-device VMEM failure).
+    """
+    stages = [(int(w), int(hh)) for (w, hh) in stages]
+    sizes = parse_fusion(fusion, len(stages))
+    clusters, lo = [], 0
+    for s in sizes:
+        clusters.append(stages[lo:lo + s])
+        lo += s
+    local_h = shard_height(h, d)
+    fused = len(clusters) == 1
+    m = max(1, min(int(m), local_h))
+    b = max(1, int(b))
+    spec = fusion or str(len(stages))
+    divisors = [v for v in range(1, local_h + 1) if local_h % v == 0]
+    geom = [
+        (sum(w for w, _ in c), sum(hh for _, hh in c)) for c in clusters
+    ]
+
+    def _legal(m_c, db, vmem):
+        """Blocks legal for every cluster; (legal, offending ci)."""
+        legal = divisors
+        for ci, (words_sum, halo_c) in enumerate(geom):
+            ok = [v for v in legal if v >= max(1, m_c * halo_c)]
+            if vmem and width and words_sum:
+                ok = [
+                    v for v in ok
+                    if cluster_vmem_bytes(v, m_c, width,
+                                          [w for w, _ in clusters[ci]],
+                                          [hh for _, hh in clusters[ci]],
+                                          db, b=b) <= vmem_bytes
+                ]
+            if not ok:
+                return [], ci
+            legal = ok
+        return legal, None
+
+    # Mirror blocking_plan: shrink the fused-step count only when a
+    # cluster's composed halo cannot be sourced on the shard at all
+    # (pipelined clusters launch one program step at a time, m_c = 1).
+    m_c = m if fused else 1
+    while True:
+        legal, ci = _legal(m_c, double_buffer, vmem=False)
+        if legal:
+            break
+        if m_c > 1:
+            m_c -= 1
+            continue
+        halo_c = geom[ci][1]
+        raise ValueError(
+            f"fusion cluster {ci} of spec {spec!r}: composed stencil "
+            f"halo {halo_c} cannot be sourced on a shard of h={local_h} "
+            f"rows (needs a block of >= {halo_c} rows dividing it"
+            f"{f'; grid h={h} over d={d} shards' if d > 1 else ''})"
+        )
+    db = bool(double_buffer)
+    fits, ci = _legal(m_c, db, vmem=True)
+    if not fits and db:
+        # Streaming fallback: single-buffered stripes have the whole
+        # budget to themselves (docs/pipeline.md §stream).
+        db = False
+        fits, ci = _legal(m_c, db, vmem=True)
+    if not fits:
+        words_sum, halo_c = geom[ci]
+        smallest = min(legal)
+        raise ValueError(
+            f"fusion cluster {ci} of spec {spec!r} fits no legal block "
+            f"on shard h={local_h} even via the single-buffer streaming "
+            f"fallback (double_buffer=False): smallest stripe set "
+            f"(block_h={smallest}, m={m_c}, composed halo={halo_c}, "
+            f"words={words_sum}, b={b}) needs "
+            f"{cluster_vmem_bytes(smallest, m_c, width, [w for w, _ in clusters[ci]], [hh for _, hh in clusters[ci]], False, b=b)}"
+            f" B > budget {vmem_bytes} B"
+        )
+    if fused:
+        m = m_c
+    under = [v for v in fits if v <= block_h]
+    return (max(under) if under else min(fits)), m, db
+
+
 def resolve_run_plan(
     h: int, point, steps: int | None = None, *, halo: int = 1,
     width: int = 0, words: int = 0, d: int = 1,
     vmem_bytes: int = VMEM_BYTES, b: int | None = None,
+    stages=None, fusion: str | None = None,
 ) -> tuple[int, int, int, bool]:
     """Turn a DSE design point into a concrete
     (block_h, m, steps, double_buffer) plan.
@@ -320,26 +554,48 @@ def resolve_run_plan(
     points), an explicit value overrides. The batch scales the VMEM
     accounting; it is not returned — it is a launch-shape property the
     caller already holds, not something legalization changes.
+
+    ``stages``/``fusion`` switch to the program-graph legalization
+    (docs/pipeline.md §program): ``stages`` is the program's
+    ``(words, halo)`` chain and ``fusion`` the partition spec (``None``
+    reads the point's ``detail['fusion']``), legalized through
+    :func:`program_blocking_plan` instead of the single-core
+    :func:`blocking_plan`. The return shape is unchanged — fusion, like
+    ``b``, is identity the caller already holds.
     """
     detail = getattr(point, "detail", None) or {}
     requested_db = bool(detail.get("double_buffer", True))
     if b is None:
         b = int(detail.get("b", 1))
-    block_h, m, double_buffer = blocking_plan(
-        h, int(point.detail["block_rows"]), int(point.m),
-        halo=halo, width=width, words=words, d=d, vmem_bytes=vmem_bytes,
-        double_buffer=requested_db, b=b,
-    )
+    if fusion is None:
+        fusion = str(detail.get("fusion", "") or "")
+    if stages is not None:
+        block_h, m, double_buffer = program_blocking_plan(
+            h, int(point.detail["block_rows"]), int(point.m),
+            stages=stages, fusion=fusion, width=width,
+            vmem_bytes=vmem_bytes, d=d, double_buffer=requested_db, b=b,
+        )
+    else:
+        block_h, m, double_buffer = blocking_plan(
+            h, int(point.detail["block_rows"]), int(point.m),
+            halo=halo, width=width, words=words, d=d,
+            vmem_bytes=vmem_bytes, double_buffer=requested_db, b=b,
+        )
     nsteps = m if steps is None else max(m, (steps // m) * m)
     return block_h, m, nsteps, double_buffer
 
 
 __all__ = [
+    "PLAN_FIELDS",
+    "RunPlan",
     "VMEM_BYTES",
     "VMEM_DOUBLE_BUFFER",
     "blocking_plan",
+    "cluster_vmem_bytes",
     "constraint_violation",
     "legal_block_values",
+    "parse_fusion",
+    "program_blocking_plan",
     "resolve_run_plan",
     "shard_height",
     "stripe_vmem_bytes",

@@ -248,6 +248,7 @@ _SALT_MODULES = (
     "repro.core.library",
     # stripe lowering + launches
     "repro.core.codegen",
+    "repro.core.program",
     "repro.core.distribute",
     "repro.kernels.spd_stream.spd_stream",
     "repro.kernels.spd_stream.sharded",
@@ -324,7 +325,9 @@ class MeasurementCache:
         fields = {
             "fingerprint": fingerprint,
             "grid_shape": [int(v) for v in grid_shape],
-            "plan": [int(v) for v in plan],  # (block_h, m, steps, d[, db])
+            # (block_h, m, steps, d[, db, b[, fusion]]) — the trailing
+            # fusion spec is a string (docs/pipeline.md §program)
+            "plan": [v if isinstance(v, str) else int(v) for v in plan],
             "backend": backend,
             "interpret": bool(interpret),
             "reps": int(reps),

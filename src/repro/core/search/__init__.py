@@ -21,6 +21,7 @@ from dataclasses import dataclass, field
 
 from .runner import (
     EXECUTED_POINT_FIELDS,
+    PLAN_FIELDS,
     BudgetExhausted,
     ExecutedPoint,
     RunPlan,
@@ -45,6 +46,7 @@ __all__ = [
     "ExecutedPoint",
     "ExhaustiveSearch",
     "LocalRefine",
+    "PLAN_FIELDS",
     "RunPlan",
     "SEARCH_RESULT_FIELDS",
     "STRATEGIES",

@@ -46,12 +46,13 @@ from dataclasses import dataclass
 from typing import Callable, Sequence
 
 from ..dse import DesignPoint, StreamWorkload
-from ..legalize import resolve_run_plan
+from ..legalize import PLAN_FIELDS, RunPlan, resolve_run_plan
 
 __all__ = [
     "BudgetExhausted",
     "EXECUTED_POINT_FIELDS",
     "ExecutedPoint",
+    "PLAN_FIELDS",
     "RunPlan",
     "SearchRunner",
     "kernel_run_factory",
@@ -75,42 +76,22 @@ def _point_b(point) -> int:
         return 1
 
 
-@dataclass(frozen=True)
-class RunPlan:
-    """One concrete, legalized execution: what a measurement times.
+def _point_fusion(point) -> str:
+    """The fusion partition a design point was modeled at ("" if none).
 
-    The identity the runner dedupes and budgets on — ``reps`` is part of
-    it because a low-rep screening pass and a full-rep final are
-    different measurements (successive halving relies on that), and
-    ``double_buffer`` is part of it because the ping/pong and
-    single-buffer streamed kernels are different code
-    (docs/pipeline.md §stream), and the batch axis ``b`` is part of it
-    because a ``b``-wide launch moves ``b×`` the data per stripe
-    (docs/pipeline.md §serve).
+    Carried in ``DesignPoint.detail`` (set by ``TPUModel.evaluate`` when
+    the workload has program stages — docs/pipeline.md §program) so
+    single-core points keep the legacy empty spec.
     """
+    detail = getattr(point, "detail", None) or {}
+    return str(detail.get("fusion", "") or "")
 
-    block_h: int
-    m: int
-    steps: int
-    d: int
-    reps: int
-    double_buffer: bool = True
-    b: int = 1
 
-    def key(self) -> tuple:
-        return (self.block_h, self.m, self.steps, self.d, self.reps,
-                bool(self.double_buffer), self.b)
-
-    def as_dict(self) -> dict:
-        return {
-            "block_h": int(self.block_h),
-            "m": int(self.m),
-            "steps": int(self.steps),
-            "d": int(self.d),
-            "reps": int(self.reps),
-            "double_buffer": bool(self.double_buffer),
-            "b": int(self.b),
-        }
+# RunPlan itself is single-sourced in ``repro.core.legalize`` (one
+# PLAN_FIELDS tuple shared by the legalizer, the runner, the study
+# journal and the measurement-cache key space — docs/pipeline.md
+# §search); it is re-exported here because the search package is where
+# most call sites import it from.
 
 
 #: The one executed-point record schema. Single source of truth for
@@ -125,6 +106,7 @@ EXECUTED_POINT_FIELDS = (
     "d",
     "double_buffer",
     "b",
+    "fusion",
     "steps",
     "wall_s",
     "measured_mlups",
@@ -164,6 +146,7 @@ class ExecutedPoint:
     reps: int = 1
     double_buffer: bool = True  # streamed buffer protocol actually run
     b: int = 1  # batch axis: independent simulations stacked in the launch
+    fusion: str = ""  # program fusion partition actually run ("" = single core)
 
     def as_dict(self) -> dict:
         """JSON-ready record — the one serialization shared by the CLI's
@@ -176,6 +159,7 @@ class ExecutedPoint:
             "d": int(self.d),
             "double_buffer": bool(self.double_buffer),
             "b": int(self.b),
+            "fusion": str(self.fusion),
             "steps": int(self.steps),
             "wall_s": float(self.wall_s),
             "measured_mlups": float(self.measured_mlups),
@@ -254,6 +238,7 @@ class SearchRunner:
         halo: int | None = None,
         width: int | None = None,
         words: int | None = None,
+        stages: tuple | None = None,
         steps: int | None = None,
         interpret: bool = True,
         reps: int = 3,
@@ -275,6 +260,10 @@ class SearchRunner:
         self.halo = workload.halo if halo is None else int(halo)
         self.width = self.w if width is None else int(width)
         self.words = workload.words_in if words is None else int(words)
+        # Per-stage (words, halo) geometry of a multi-core program: when
+        # set, plans legalize through the fused-cluster accounting
+        # (legalize.program_blocking_plan) at each point's fusion spec.
+        self.stages = None if stages is None else tuple(stages)
         self.steps = steps
         self.interpret = bool(interpret)
         self.reps = int(reps)
@@ -321,7 +310,8 @@ class SearchRunner:
     # ---- model-side helpers ------------------------------------------------
 
     def point(self, block_h: int, m: int, d: int = 1,
-              double_buffer: bool | None = None) -> DesignPoint | None:
+              double_buffer: bool | None = None,
+              fusion: str | None = None) -> DesignPoint | None:
         """Materialize a lattice coordinate through the scalar model.
 
         Strategies use this to price neighborhood moves (LocalRefine's
@@ -336,6 +326,8 @@ class SearchRunner:
         kwargs = dict(self.scalar_kwargs)
         if double_buffer is not None:
             kwargs["double_buffer"] = bool(double_buffer)
+        if fusion is not None:
+            kwargs["fusion"] = str(fusion)
         return self.model.evaluate(
             self.workload, int(block_h), int(m), d=int(d), **kwargs,
         )
@@ -351,16 +343,18 @@ class SearchRunner:
         if d > self.max_devices:
             return None
         b = _point_b(point)
+        fusion = _point_fusion(point)
         try:
             block_h, m, nsteps, double_buffer = resolve_run_plan(
                 self.h, point, self.steps, halo=self.halo,
                 width=self.width, words=self.words, d=d, b=b,
+                stages=self.stages, fusion=fusion,
             )
         except ValueError:
             return None
         return RunPlan(block_h, m, nsteps, d,
                        self.reps if reps is None else int(reps),
-                       double_buffer, b)
+                       double_buffer, b, fusion)
 
     # ---- cache / study key space -------------------------------------------
 
@@ -391,10 +385,12 @@ class SearchRunner:
         fp = self.study_fingerprint()
         if fp is None:
             return None
+        plan_key = (plan.block_h, plan.m, plan.steps, plan.d,
+                    int(plan.double_buffer), plan.b)
+        if plan.fusion:  # "" keeps pre-program cache keys byte-identical
+            plan_key = plan_key + (plan.fusion,)
         return measure.MeasurementCache.make_key(
-            fp, (self.h, self.w),
-            (plan.block_h, plan.m, plan.steps, plan.d,
-             int(plan.double_buffer), plan.b),
+            fp, (self.h, self.w), plan_key,
             self.backend, self.interpret, plan.reps, self.warmup,
         )
 
@@ -454,21 +450,28 @@ class SearchRunner:
             self.skipped_devices += 1
             return None
         b = _point_b(point)
+        fusion = _point_fusion(point)
         reps = self.reps if reps is None else int(reps)
         try:
             block_h, m, nsteps, double_buffer = resolve_run_plan(
                 self.h, point, self.steps, halo=self.halo,
                 width=self.width, words=self.words, d=d, b=b,
+                stages=self.stages, fusion=fusion,
             )
         except ValueError:
             self.skipped_illegal += 1
             return None
-        plan = RunPlan(block_h, m, nsteps, d, reps, double_buffer, b)
+        plan = RunPlan(block_h, m, nsteps, d, reps, double_buffer, b, fusion)
 
         cached = True
         wall = self._walls.get(plan.key())  # in-run dedupe, cache-independent
         if wall is None:
-            if b != 1:
+            if fusion:
+                # Program plans need a fusion-aware factory; single-core
+                # back ends never see the kwarg for the "" spec.
+                run = self.run_factory(nsteps, m, block_h, d,
+                                       double_buffer, b=b, fusion=fusion)
+            elif b != 1:
                 # Batched plans need a batch-aware factory; older ones
                 # (and custom back ends) never see the kwarg for b=1.
                 run = self.run_factory(nsteps, m, block_h, d,
@@ -514,7 +517,7 @@ class SearchRunner:
             # raw lattice pick) under the measured platform constants.
             calibrated = self._calibrated_model(d, (block_h, m)).evaluate(
                 self.workload, block_h, m, d=d, double_buffer=double_buffer,
-                b=b,
+                b=b, fusion=fusion,
             ).sustained_gflops
         headline = calibrated if calibrated is not None else predicted
         executed = ExecutedPoint(
@@ -537,6 +540,7 @@ class SearchRunner:
             reps=reps,
             double_buffer=double_buffer,
             b=b,
+            fusion=fusion,
         )
         if self.study is not None:
             self.study.record_trial(self, executed, **self.study_meta)

@@ -91,7 +91,7 @@ def _ranked_candidates(sweep, runner: SearchRunner) -> list:
         if plan is None:
             continue
         dedup = (plan.block_h, plan.m, plan.steps, plan.d,
-                 plan.double_buffer, plan.b)
+                 plan.double_buffer, plan.b, plan.fusion)
         if dedup in seen:
             continue
         seen.add(dedup)
@@ -161,7 +161,8 @@ class LocalRefine:
             e = runner.measure(pt)
             if e is None:
                 return None
-            plan = (e.block_h, e.m, e.steps, e.d, e.double_buffer, e.b)
+            plan = (e.block_h, e.m, e.steps, e.d, e.double_buffer, e.b,
+                    e.fusion)
             if plan not in seen:
                 seen.add(plan)
                 out.append(e)
@@ -179,7 +180,11 @@ class LocalRefine:
             for _ in range(self.max_rounds):
                 improved = False
                 for nb, nm, nd, ndb in self._neighborhood(best, runner):
-                    pt = runner.point(nb, nm, nd, double_buffer=ndb)
+                    # Moves stay within the incumbent's fusion partition
+                    # (docs/pipeline.md §program) — the fusion axis is
+                    # explored by the sweep lattice, not the hill-climb.
+                    pt = runner.point(nb, nm, nd, double_buffer=ndb,
+                                      fusion=best.fusion or None)
                     if pt is None or not pt.feasible:
                         continue
                     e = visit(pt)

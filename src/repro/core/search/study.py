@@ -172,6 +172,9 @@ class Study:
                 # (docs/pipeline.md §serve).
                 bool(point.get("double_buffer", True)),
                 int(point.get("b", 1)),
+                # "" for journals older than the fusion plan dimension
+                # (docs/pipeline.md §program).
+                str(point.get("fusion", "") or ""),
             )
         coords = rec.get("coords")
         if coords is not None:
@@ -201,10 +204,7 @@ class Study:
         from .runner import RunPlan
 
         point = executed.as_dict()
-        plan = RunPlan(point["block_h"], point["m"], point["steps"],
-                       point["d"], point["reps"],
-                       bool(point.get("double_buffer", True)),
-                       int(point.get("b", 1)))
+        plan = RunPlan.from_dict(point)
         rec = {
             "v": self.VERSION,
             "study": self.name,
@@ -277,13 +277,9 @@ class Study:
 
         n = 0
         for rec in self.trials_for(runner):
-            p = rec["point"]
-            plan = RunPlan(int(p["block_h"]), int(p["m"]), int(p["steps"]),
-                           int(p["d"]), int(p["reps"]),
-                           bool(p.get("double_buffer", True)),
-                           int(p.get("b", 1)))
+            plan = RunPlan.from_dict(rec["point"])
             if plan.key() not in runner._walls:
-                runner._walls[plan.key()] = float(p["wall_s"])
+                runner._walls[plan.key()] = float(rec["point"]["wall_s"])
                 n += 1
         runner.replayed += n
         return n

@@ -103,10 +103,14 @@ class TPESearch:
             m = int(sweep.data["m"][i])
             d = max(1, int(sweep.data["n"][i]))
             b = (int(sweep.data["b"][i]) if "b" in sweep.data else 1)
+            fus = (str(sweep.data["fusion"][i])
+                   if "fusion" in sweep.data else "")
+            # Candidate coords stay numeric (the study journals them as
+            # ints); the fusion spec joins the dedupe key separately.
             coords = (bh, m, d, b)
-            if coords in seen_coords:
+            if coords + (fus,) in seen_coords:
                 continue
-            seen_coords.add(coords)
+            seen_coords.add(coords + (fus,))
             if d > runner.max_devices:
                 runner.skipped_devices += 1
                 continue
@@ -122,13 +126,13 @@ class TPESearch:
                 )
                 out.append(_Candidate(
                     point=pt, coords=coords,
-                    x=self._features(bh, m, d, req_db, b),
+                    x=self._features(bh, m, d, req_db, b, fus),
                     plan=None, violation=max(viol, 1e-9),
                     model_gflops=float(gflops[i]),
                 ))
                 continue
             pkey = (plan.block_h, plan.m, plan.steps, plan.d,
-                    plan.double_buffer, plan.b)
+                    plan.double_buffer, plan.b, plan.fusion)
             if pkey in seen_plans:
                 continue  # same concrete plan: model-best spelling wins
             seen_plans.add(pkey)
@@ -136,7 +140,7 @@ class TPESearch:
                 point=pt,
                 coords=(plan.block_h, plan.m, plan.d, plan.b),
                 x=self._features(plan.block_h, plan.m, plan.d,
-                                 plan.double_buffer, plan.b),
+                                 plan.double_buffer, plan.b, plan.fusion),
                 plan=plan, violation=0.0,
                 model_gflops=float(gflops[i]),
             ))
@@ -144,16 +148,21 @@ class TPESearch:
 
     @staticmethod
     def _features(bh: int, m: int, d: int,
-                  double_buffer: bool = True, b: int = 1) -> np.ndarray:
+                  double_buffer: bool = True, b: int = 1,
+                  fusion: str = "") -> np.ndarray:
         """Log2 lattice coordinates plus the binary buffer-protocol axis:
         the natural metric of a power-of-two sweep (one halving/doubling
         = one unit in every dimension; a double_buffer flip likewise,
         docs/pipeline.md §stream). The batch axis b joins in log2 too
-        (docs/pipeline.md §serve)."""
+        (docs/pipeline.md §serve), and a program's fusion partition
+        (docs/pipeline.md §program) contributes its cluster count in
+        log2 — finer partitions are farther from fully fused, and
+        single-core plans ("" = one cluster) sit at the legacy origin."""
+        nclusters = fusion.count("+") + 1 if fusion else 1
         return np.array(
             [math.log2(max(1, bh)), math.log2(max(1, m)),
              math.log2(max(1, d)), float(bool(double_buffer)),
-             math.log2(max(1, b))], float,
+             math.log2(max(1, b)), math.log2(max(1, nclusters))], float,
         )
 
     # ---- density model -----------------------------------------------------

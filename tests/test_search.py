@@ -44,6 +44,7 @@ from repro.core.legalize import (
 )
 from repro.core.measure import MeasurementCache
 from repro.core.search import (
+    PLAN_FIELDS,
     BudgetExhausted,
     ExhaustiveSearch,
     LocalRefine,
@@ -343,8 +344,7 @@ def test_search_result_schema(ex, sweep):
     assert d["strategy"] == "halving" and d["budget"] == 6
     assert d["budget_spent"] == res.budget_spent
     for m in d["measurements"]:
-        assert set(m) == {"block_h", "m", "steps", "d", "reps",
-                          "double_buffer", "b", "count"}
+        assert set(m) == set(PLAN_FIELDS) | {"count"}
         assert m["count"] >= 1
     assert d["best"] == res.best.as_dict()
 
