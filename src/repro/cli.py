@@ -22,7 +22,10 @@ re-measurement; ``--seed`` fixes the TPE sampler's RNG and ``--trials``
 bounds its total observations. Single-device points
 run the codegen'd kernel directly, ``d > 1`` points run sharded with
 halo exchange when the platform has the devices. ``--devices N`` caps
-the swept d axis, ``--json PATH`` dumps the machine-readable results
+the swept d axis; ``--mesh DYxDX`` pins a 2-D device mesh (rows shard
+across DY, columns across DX — DESIGN.md §15) and ``--mesh auto``
+sweeps the column axis so the search enumerates factorizations of the
+device count. ``--json PATH`` dumps the machine-readable results
 (including ``strategy``, ``budget_spent``, and per-candidate
 measurement counts) for scripting.
 
@@ -43,6 +46,8 @@ import json
 def _point_dict(p) -> dict:
     return {
         "d": int(p.n),
+        "dx": int(p.detail.get("dx", 1)),
+        "dy": int(p.detail.get("dy", p.n)),
         "m": int(p.m),
         "block_h": int(p.detail.get("block_rows", 0)) or None,
         "feasible": bool(p.feasible),
@@ -76,6 +81,14 @@ def explore_main(argv: list[str] | None = None) -> None:
                          "N (execution shards onto real devices; off-TPU "
                          "force host devices with XLA_FLAGS=--xla_force_"
                          "host_platform_device_count=N)")
+    ap.add_argument("--mesh", type=str, default=None, metavar="DYxDX",
+                    help="2-D device mesh for the TPU sweeps (DESIGN.md "
+                         "§15): 'DYxDX' pins the mesh shape (d = DY*DX; "
+                         "rows shard across DY, columns across DX with "
+                         "ppermute column-halo exchange), 'auto' sweeps "
+                         "every power-of-two column count up to --devices "
+                         "so the search enumerates the legal "
+                         "factorizations of each device count")
     ap.add_argument("--json", type=str, default=None, metavar="PATH",
                     help="write the sweep/execution results as JSON")
     ap.add_argument("--no-execute", action="store_true",
@@ -136,7 +149,26 @@ def explore_main(argv: list[str] | None = None) -> None:
                          "carries the partition per executed point")
     args = ap.parse_args(argv)
     d_values = device_axis_values(args.devices)
-    report: dict = {"d_values": list(d_values)}
+    dx_values: tuple[int, ...] = (1,)
+    if args.mesh:
+        if args.mesh.strip().lower() == "auto":
+            # Sweep every power-of-two column count; evaluate_batch
+            # marks the non-factorizations (d % dx != 0) infeasible, so
+            # the cross product enumerates exactly the legal meshes.
+            dx_values = d_values
+        else:
+            try:
+                dy_s, dx_s = args.mesh.strip().lower().split("x")
+                mesh_dy, mesh_dx = int(dy_s), int(dx_s)
+            except ValueError:
+                ap.error(f"--mesh {args.mesh!r}: expected DYxDX "
+                         "(e.g. 2x4) or auto")
+            if mesh_dy < 1 or mesh_dx < 1:
+                ap.error("--mesh: DY and DX must be >= 1")
+            d_values = (mesh_dy * mesh_dx,)
+            dx_values = (mesh_dx,)
+    report: dict = {"d_values": list(d_values),
+                    "dx_values": list(dx_values), "mesh": args.mesh}
 
     print("=" * 72)
     print("1) The paper's case study: LBM on the Stratix V model")
@@ -161,7 +193,7 @@ def explore_main(argv: list[str] | None = None) -> None:
     print("2) Hardware adaptation: temporal blocking on TPU v5e,")
     print(f"   device axis d ∈ {d_values} (sharding + halo exchange)")
     print("=" * 72)
-    tsweep = ex.sweep_tpu(d_values=d_values,
+    tsweep = ex.sweep_tpu(d_values=d_values, dx_values=dx_values,
                           double_buffer=args.double_buffer)
     print(tsweep.table(k=8))
     print()
@@ -183,6 +215,13 @@ def explore_main(argv: list[str] | None = None) -> None:
         # measurement grid the model drops d=1 off the frontier, so an
         # uncapped sweep leaves a single-device machine nothing to time.
         exec_d = device_axis_values(min(args.devices, jax.device_count()))
+        if args.mesh and args.mesh.strip().lower() != "auto":
+            exec_d = tuple(
+                d for d in d_values if d <= jax.device_count()
+            ) or exec_d
+        exec_dx = tuple(
+            x for x in dx_values if x <= jax.device_count()
+        ) or (1,)
         # The default strategy reproduces the original behavior: walk
         # the Pareto frontier until --topk points executed. The others
         # (--strategy refine/halving) search measured-in-the-loop under
@@ -211,6 +250,7 @@ def explore_main(argv: list[str] | None = None) -> None:
         mex = msim.explorer()
         msweep = mex.sweep_tpu(bh_values=(8, 16, 32, 64),
                                m_values=(1, 2, 4, 8), d_values=exec_d,
+                               dx_values=exec_dx,
                                double_buffer=args.double_buffer)
         f0, attr, _ = lbm.taylor_green_init(256, 128)
         mres = mex.search(
@@ -235,6 +275,7 @@ def explore_main(argv: list[str] | None = None) -> None:
         dex = dsim.explorer()
         dsweep = dex.sweep_tpu(bh_values=(8, 16, 32, 64),
                                m_values=(1, 2, 4, 8), d_values=exec_d,
+                               dx_values=exec_dx,
                                double_buffer=args.double_buffer)
         u0, _ = dif.sine_init(256, 128)
         dres = dex.search(dsweep, dsim.state(u0), (dsim.alpha,),
@@ -278,7 +319,8 @@ def explore_main(argv: list[str] | None = None) -> None:
                 pex = prog.explorer(128 * 128, grid_w=128)
                 psweep = pex.sweep_tpu(
                     bh_values=(8, 16, 32), m_values=(1, 2, 4),
-                    d_values=exec_d, double_buffer=args.double_buffer,
+                    d_values=exec_d, dx_values=exec_dx,
+                    double_buffer=args.double_buffer,
                     fusion_values=fusion_partitions(prog.nstages),
                 )
                 pres = pex.search(
@@ -300,6 +342,7 @@ def explore_main(argv: list[str] | None = None) -> None:
             "double_buffer": bool(args.double_buffer),
             "strategy": args.strategy,
             "budget": args.budget,
+            "mesh": args.mesh,
             "cache": None if mcache is None else mcache.stats(),
             "study": args.study,
             "seed": args.seed,

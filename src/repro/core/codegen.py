@@ -19,7 +19,13 @@ bottom of the paper's flow, where the generated datapath actually runs
    reads become non-periodic in-stripe shifts (the halo rows supply the
    neighbor values; ``halo`` edge rows go stale per application — the
    temporal-blocking trapezoid), x stencil reads become periodic
-   in-register shifts (the full row width is VMEM-resident).
+   in-register shifts (the full row width is VMEM-resident). Under a
+   column-sharded 2-D device mesh the x reads switch to the same
+   non-periodic zero-fill treatment as y (:meth:`StreamKernel
+   ._step_fn_guarded`): the stripe then carries ``m·halo_x`` guard
+   columns per side whose values came off-device, and columns consuming
+   the zero fill are exactly the guard columns the launch crops
+   (DESIGN.md §15).
 3. **Launch + legalization** — the stripe function is handed to
    :func:`repro.kernels.spd_stream.spd_multistep` for the
    ``(block_h + 2·m·halo)``-row Pallas launch; explorer-chosen
@@ -271,13 +277,19 @@ def stencil_summary(compiled: CompiledCore,
 # --------------------------------------------------------------------------
 
 
-def _stripe_shift(x, dy: int, dx: int):
+def _stripe_shift(x, dy: int, dx: int, periodic_x: bool = True):
     """``out[y, x] = in[y-dy, x-dx]`` on a (rows, W) stripe.
 
     y is shifted non-periodically with zero fill — the stripe's halo rows
     hold the true neighbor values, and rows that consume the zero fill
     are exactly the rows the trapezoid retires; x is shifted
     periodically in-register (the full row width is resident).
+
+    ``periodic_x=False`` is the column-sharded lowering (DESIGN.md §15):
+    x gets the same zero-fill treatment as y, because the stripe then
+    carries guard columns holding the true neighbor values — columns
+    that consume the zero fill are exactly the stale guard columns the
+    sharded launch crops.
     """
     if dy:
         pad = jnp.zeros((abs(dy),) + x.shape[1:], x.dtype)
@@ -286,6 +298,15 @@ def _stripe_shift(x, dy: int, dx: int):
             if dy > 0
             else jnp.concatenate([x[-dy:], pad], axis=0)
         )
+    if not periodic_x:
+        if dx:
+            pad = jnp.zeros(x.shape[:-1] + (abs(dx),), x.dtype)
+            x = (
+                jnp.concatenate([pad, x[:, :-dx]], axis=1)
+                if dx > 0
+                else jnp.concatenate([x[:, -dx:], pad], axis=1)
+            )
+        return x
     dx %= x.shape[1]  # periodic: offsets beyond one row width wrap
     if dx:
         # With dx normalized into [1, W), this one concatenate is the
@@ -294,7 +315,8 @@ def _stripe_shift(x, dy: int, dx: int):
     return x
 
 
-def _eval_stripe(compiled: CompiledCore, env: dict) -> list:
+def _eval_stripe(compiled: CompiledCore, env: dict,
+                 periodic_x: bool = True) -> list:
     """Evaluate a core's DFG over (rows, W) stripe arrays.
 
     Structurally identical to :meth:`CompiledCore.apply` (same casts,
@@ -328,6 +350,7 @@ def _eval_stripe(compiled: CompiledCore, env: dict) -> list:
                     _stripe_shift(
                         jnp.asarray(ins[0], jnp.float32),
                         int(p.get("dy", 0)), int(p.get("dx", 0)),
+                        periodic_x=periodic_x,
                     )
                 ]
             else:
@@ -337,7 +360,7 @@ def _eval_stripe(compiled: CompiledCore, env: dict) -> list:
             sub_env.update({
                 k: jnp.float32(v) for k, v in mod.core.params.items()
             })
-            outs = _eval_stripe(mod, sub_env)
+            outs = _eval_stripe(mod, sub_env, periodic_x=periodic_x)
         if len(outs) != len(node.outputs):
             raise CodegenError(
                 f"node {node.name}: module {node.module} returned "
@@ -397,6 +420,7 @@ class StreamKernel:
                 "(mode=wrap). Express walls via stream attributes."
             )
         self.halo = self.summary.halo()
+        self.halo_x = self.summary.halo_x
         self._ports = core.main_input_ports()
         self._regs = list(core.regs)
         self._params = dict(core.params)
@@ -417,7 +441,7 @@ class StreamKernel:
             ),
             static_argnames=("m", "block_h", "double_buffer", "interpret"),
         )
-        self._sharded: dict[int, object] = {}
+        self._sharded: dict[tuple[int, int], object] = {}
         # jit'd so the steps//m launch loop compiles once per plan shape
         # and is reused across calls (an eager lax.fori_loop over a fresh
         # closure would re-lower the whole loop on every invocation —
@@ -442,12 +466,27 @@ class StreamKernel:
         are handled by vmapping this same body over each leading axis,
         so batched and unbatched launches share one lowering.
         """
+        return self._apply_stripe(f_ext, regs, periodic_x=True)
+
+    def _step_fn_guarded(self, f_ext, regs):
+        """The column-sharded stripe body (DESIGN.md §15): identical
+        arithmetic, but x stencil reads are non-periodic zero-fill
+        shifts — the stripe's ``m·halo_x`` guard columns hold the true
+        neighbor values (delivered by the mesh's column-halo exchange),
+        and the columns consuming the zero fill are exactly the stale
+        guard columns the sharded launch crops.
+        """
+        return self._apply_stripe(f_ext, regs, periodic_x=False)
+
+    def _apply_stripe(self, f_ext, regs, *, periodic_x):
         if f_ext.ndim > 3:
-            return jax.vmap(lambda s: self._step_fn(s, regs))(f_ext)
+            return jax.vmap(
+                lambda s: self._apply_stripe(s, regs, periodic_x=periodic_x)
+            )(f_ext)
         env: dict = {p: f_ext[i] for i, p in enumerate(self._ports)}
         env.update(dict(zip(self._regs, regs)))
         env.update({k: jnp.float32(v) for k, v in self._params.items()})
-        outs = _eval_stripe(self.compiled, env)
+        outs = _eval_stripe(self.compiled, env, periodic_x=periodic_x)
         n = len(self._ports)
         return jnp.stack([jnp.asarray(o, f_ext.dtype) for o in outs[:n]])
 
@@ -498,24 +537,28 @@ class StreamKernel:
             interpret=interpret,
         )
 
-    def sharded(self, d: int, devices: Sequence | None = None):
-        """Decompose this kernel across ``d`` devices along y.
+    def sharded(self, d: int, devices: Sequence | None = None,
+                dx: int = 1):
+        """Decompose this kernel across ``d`` devices.
 
         Returns a :class:`repro.core.distribute.ShardedStreamKernel`
-        running this kernel's stripe function per shard with ring halo
+        running this kernel's stripe function per shard with halo
         exchange between fused launches (docs/pipeline.md §distribute).
+        ``dx`` factors ``d`` into a ``(dy, dx)`` 2-D mesh
+        (DESIGN.md §15): rows shard over ``dy = d / dx`` with the ring
+        exchange, columns over ``dx`` with the column-halo exchange.
         ``d == 1`` is the identity wrapper (delegates straight back).
-        Default-device wrappers are cached per ``d`` so repeat callers
-        (e.g. an app driver looping ``run(..., d=2)``) reuse the
+        Default-device wrappers are cached per ``(d, dx)`` so repeat
+        callers (e.g. an app driver looping ``run(..., d=2)``) reuse the
         shard_map jit cache instead of recompiling every call.
         """
         from .distribute import ShardedStreamKernel
 
         if devices is not None:
-            return ShardedStreamKernel(self, d, devices)
-        if d not in self._sharded:
-            self._sharded[d] = ShardedStreamKernel(self, d)
-        return self._sharded[d]
+            return ShardedStreamKernel(self, d, devices, dx=dx)
+        if (d, dx) not in self._sharded:
+            self._sharded[(d, dx)] = ShardedStreamKernel(self, d, dx=dx)
+        return self._sharded[(d, dx)]
 
     def run_for_point(self, state, regs: Sequence = (), *, point,
                       steps: int | None = None, interpret: bool = True):
@@ -536,6 +579,7 @@ class StreamKernel:
             b *= int(n)
         block_h, m, nsteps, double_buffer = resolve_run_plan(
             h, point, steps, halo=self.halo, width=w, words=p, b=b,
+            dx=1,  # this is the single-device launch path
         )
         out = self.run_blocked(
             state, regs, steps=nsteps, m=m, block_h=block_h,

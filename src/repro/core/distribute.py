@@ -1,53 +1,77 @@
-"""Multi-device spatial parallelism for stream kernels: the device axis.
+"""Multi-device spatial parallelism for stream kernels: the device mesh.
 
 The paper's spatial parallelism duplicates pipelines until one chip's
 resources (or its memory link) give out. This module is the
-production-scale continuation (DESIGN.md §8, docs/pipeline.md
+production-scale continuation (DESIGN.md §8, §15, docs/pipeline.md
 §distribute): duplicate across *chips*. A codegen'd
 :class:`~repro.core.codegen.StreamKernel`'s ``(P, H, W)`` grid is
-decomposed along y into ``d`` equal shards on a one-axis ring
-:class:`~jax.sharding.Mesh`; every device runs the same temporal-blocking
-Pallas launch on its own shard under ``shard_map``, and before each fused
-m-step launch the ``m·halo`` boundary rows are exchanged with both ring
-neighbors via ``lax.ppermute`` (the mesh ring is what makes the global
-periodic boundary come out right: shard 0's up-neighbor is shard d-1).
+decomposed across a 2-D device mesh ``(dy, dx)``: rows split into ``dy``
+equal shards on the row axis (the original one-axis ring) and columns
+into ``dx`` equal shards on the column axis, ``d = dy·dx`` devices in
+total. Every device runs the same temporal-blocking Pallas launch on its
+own ``(H/dy, W/dx)`` shard under ``shard_map``, and before each fused
+m-step launch the boundary data is exchanged with the mesh neighbors via
+``lax.ppermute`` (both axes are rings, which is what makes the global
+periodic boundary come out right: shard 0's up-neighbor is shard dy-1,
+and column shard 0's left-neighbor is column shard dx-1).
 
-Halo-exchange protocol, per fused launch (DESIGN.md §8):
+Halo-exchange protocol, per fused launch (DESIGN.md §8 for the row axis,
+§15 for the column axis):
 
-1. each shard sends its bottom ``m·halo`` rows to the next shard on the
-   ring and its top ``m·halo`` rows to the previous one (two
-   ``ppermute`` collectives — on TPU these ride the ICI links the DSE
-   model's ``t_collective`` term prices);
-2. the received rows are padded out to one full ``block_h`` guard block
-   per side, giving the extended shard
-   ``[pad | up-halo | local | down-halo | pad]``;
-3. :func:`repro.kernels.spd_stream.sharded.spd_multistep_halo` advances
-   the shard m steps with the exact single-device stripe assembly, the
-   guard blocks standing in for the neighbor blocks.
+1. each shard sends its bottom ``m·halo`` rows to the next row shard and
+   its top ``m·halo`` rows to the previous one, and — when ``dx > 1`` —
+   its rightmost ``m·halo_x`` columns to the next column shard and its
+   leftmost to the previous one (four ``ppermute`` collectives issued
+   together, all depending only on the current shard — on TPU these ride
+   the ICI links the DSE model's ``t_collective`` term prices, row and
+   column volumes separately);
+2. a small second hop column-permutes the edges of the received row
+   guards to fetch the four ``(m·halo, m·halo_x)`` corner blocks from
+   the diagonal neighbors, then the shard is extended to
+   ``[left-guard | local | right-guard]`` in x and the row guards padded
+   out to one full ``block_h`` guard block per side, giving
+   ``[pad | up-halo | local | down-halo | pad]`` over the extended
+   width;
+3. :func:`repro.kernels.spd_stream.sharded.spd_multistep_halo` (via its
+   streamed twin) advances the shard m steps with the exact
+   single-device stripe assembly — under ``dx > 1`` the stripe body is
+   the kernel's *guarded* variant
+   (:meth:`~repro.core.codegen.StreamKernel._step_fn_guarded`), whose x
+   stencil reads are non-periodic zero-fill shifts so the guard columns
+   supply the neighbor values; the ``m·halo_x`` guard columns go stale
+   one stencil reach per application (the same trapezoid as the guard
+   rows) and are cropped from the launch output.
 
-Because step 3 reuses the single-device kernel body and step 1 delivers
-exactly the rows the periodic index maps would have read, the sharded
-run is **bit-identical** to the single-device kernel for any legal
-``d`` — the correctness contract asserted in ``tests/test_distribute.py``
-for ``d ∈ {1, 2, 4}`` on both shipped apps.
+Because step 3 reuses the single-device kernel arithmetic and steps 1–2
+deliver exactly the rows and columns the periodic index maps / periodic
+in-register x shifts would have read, the sharded run is **bit-identical**
+to the single-device kernel for any legal mesh — the correctness
+contract asserted in ``tests/test_distribute.py`` (1-D ring) and
+``tests/test_mesh.py`` (the 2-D mesh matrix).
 
-**Overlapped exchange** (docs/pipeline.md §overlap): only the shard's
-two *edge* blocks read exchanged rows — every interior block's stripe
-is fully local. When a shard has at least three blocks, the fused
-launch is decomposed into an interior launch that needs nothing from
-the ``ppermute`` collectives plus two one-block edge launches that do,
-so XLA is free to run the halo exchange on the ICI links while the
-interior blocks compute. Each block's stripe is assembled from exactly
-the same rows either way, which keeps the decomposition bitwise
-identical to the monolithic launch (and the sharded run bit-identical
-to single-device); shards shorter than three blocks fall back to the
-monolithic exchange-then-compute path.
+**Overlapped exchange** (docs/pipeline.md §overlap, DESIGN.md §12, §15):
+only the shard's two *edge* row blocks read exchanged rows — every
+interior block's stripe is fully local in y. When a shard has at least
+three blocks, the fused launch is decomposed into an interior launch
+plus two one-block edge launches; the interior launch depends on the
+column exchange (every row block spans the full shard width) but not on
+the row exchange or the corner hop, so XLA is free to run the row
+exchange and corner fetch on the ICI links while the interior blocks
+compute — the generalization of the 1-D overlap, where the interior
+depended on no collective at all. Each block's stripe is assembled from
+exactly the same values either way, which keeps the decomposition
+bitwise identical to the monolithic launch (and the sharded run
+bit-identical to single-device); shards shorter than three blocks fall
+back to the monolithic exchange-then-compute path.
 
 Plans come from the shared legalizer (docs/pipeline.md §legalize) with
-per-shard accounting: ``blocking_plan(..., d=d)`` requires ``d | H`` and
-tiles the *shard* height. Off-TPU, ``d`` host devices are available under
+per-shard accounting: ``blocking_plan(..., d=d, dx=dx)`` requires
+``dy | H`` and ``dx | W`` and tiles the *shard* geometry — the
+per-stripe width term drops to ``W/dx`` (plus the guard columns), which
+is what lets wide grids legalize larger ``block_h``/``m`` under column
+sharding. Off-TPU, the mesh devices are available under
 ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` with the kernels
-in interpret mode — how CI runs the distribution suite.
+in interpret mode — how CI runs the distribution and mesh suites.
 """
 
 from __future__ import annotations
@@ -62,15 +86,21 @@ from jax.sharding import Mesh, PartitionSpec as P
 from repro.compat import shard_map
 from repro.parallel.sharding import stream_grid_pspec
 
-from .legalize import resolve_run_plan, shard_height
+from .legalize import mesh_shape, resolve_run_plan, shard_height, shard_width
 
-#: Name of the device axis on the ring mesh.
+#: Name of the row device axis (the original ring axis).
 DEVICE_AXIS = "d"
+
+#: Name of the column device axis of the 2-D mesh (DESIGN.md §15).
+DEVICE_AXIS_X = "dx"
 
 __all__ = [
     "DEVICE_AXIS",
+    "DEVICE_AXIS_X",
     "ShardedStreamKernel",
     "device_axis_values",
+    "device_mesh",
+    "mesh_axis_values",
     "ring_mesh",
 ]
 
@@ -85,6 +115,22 @@ def device_axis_values(max_d: int) -> tuple[int, ...]:
         vals.append(v)
         v *= 2
     return tuple(vals)
+
+
+def mesh_axis_values(max_d: int) -> tuple[tuple[int, int], ...]:
+    """Every power-of-two mesh shape ``(dy, dx)`` with ``dy·dx <= max_d``.
+
+    The mesh-shape enumeration of the device count's factorizations
+    (DESIGN.md §15): the searched lattice of spatial decompositions, the
+    2-D generalization of :func:`device_axis_values`. ``(d, 1)`` shapes
+    are the legacy 1-D rings.
+    """
+    return tuple(
+        (dy, dx)
+        for dy in device_axis_values(max_d)
+        for dx in device_axis_values(max_d)
+        if dy * dx <= max_d
+    )
 
 
 def ring_mesh(d: int, devices: Sequence | None = None) -> Mesh:
@@ -107,24 +153,56 @@ def ring_mesh(d: int, devices: Sequence | None = None) -> Mesh:
     return Mesh(np.array(devs[:d]), (DEVICE_AXIS,))
 
 
+def device_mesh(dy: int, dx: int,
+                devices: Sequence | None = None) -> Mesh:
+    """A two-axis ``(dy, dx)`` device mesh (DESIGN.md §15).
+
+    Rows shard over :data:`DEVICE_AXIS`, columns over
+    :data:`DEVICE_AXIS_X`; both axes are rings for ``lax.ppermute``, so
+    the grid's periodic boundary closes across chips in y *and* x.
+    Raises when the platform has fewer than ``dy·dx`` devices.
+    """
+    if dy < 1 or dx < 1:
+        raise ValueError(f"mesh axes must be >= 1, got (dy={dy}, dx={dx})")
+    d = dy * dx
+    devs = list(devices) if devices is not None else list(jax.devices())
+    if len(devs) < d:
+        raise ValueError(
+            f"need {d} devices for a ({dy}, {dx}) mesh, have {len(devs)} "
+            f"(off-TPU: XLA_FLAGS=--xla_force_host_platform_device_count={d})"
+        )
+    return Mesh(
+        np.array(devs[:d]).reshape(dy, dx), (DEVICE_AXIS, DEVICE_AXIS_X)
+    )
+
+
 class ShardedStreamKernel:
-    """A codegen'd stream kernel decomposed across ``d`` devices along y.
+    """A codegen'd stream kernel decomposed across a ``(dy, dx)`` mesh.
 
     Obtained via :meth:`repro.core.codegen.StreamKernel.sharded`. The
     public surface mirrors the single-device kernel —
     :meth:`run_blocked` / :meth:`run_for_point` — so the explorer times
     single- and multi-device frontier points through one code path
     (docs/pipeline.md §execute); ``d == 1`` simply delegates to the
-    wrapped kernel (no mesh, no exchange).
+    wrapped kernel (no mesh, no exchange). ``d`` is the *total* device
+    count and ``dx`` its column factor (``dy = d / dx``, DESIGN.md §15);
+    ``dx == 1`` keeps the original 1-D ring path byte-for-byte.
     """
 
     def __init__(self, kernel, d: int, devices: Sequence | None = None,
-                 overlap: bool = True):
+                 overlap: bool = True, dx: int = 1):
         self.kernel = kernel
         self.d = int(d)
+        self.dy, self.dx = mesh_shape(self.d, dx)
         self.halo = kernel.halo
+        self.halo_x = int(getattr(kernel, "halo_x", kernel.halo))
         self.overlap = bool(overlap)
-        self.mesh = ring_mesh(self.d, devices) if self.d > 1 else None
+        if self.d == 1:
+            self.mesh = None
+        elif self.dx == 1:
+            self.mesh = ring_mesh(self.d, devices)
+        else:
+            self.mesh = device_mesh(self.dy, self.dx, devices)
         self._jitted: dict = {}
 
     # ---- the shard-mapped launch loop --------------------------------------
@@ -136,6 +214,24 @@ class ShardedStreamKernel:
         cached = self._jitted.get(key)
         if cached is not None:
             return cached
+        local_run = (
+            self._local_run_ring if self.dx == 1 else self._local_run_mesh
+        )(steps, m, block_h, double_buffer, overlap, interpret)
+        spec = stream_grid_pspec(
+            DEVICE_AXIS, axis_x=DEVICE_AXIS_X if self.dx > 1 else None
+        )
+        fn = jax.jit(shard_map(
+            local_run, mesh=self.mesh, in_specs=(spec, P(None)),
+            out_specs=spec, check_vma=False,
+        ))
+        self._jitted[key] = fn
+        return fn
+
+    def _local_run_ring(self, steps, m, block_h, double_buffer, overlap,
+                        interpret):
+        """The 1-D row-ring per-shard loop (DESIGN.md §8) — unchanged
+        from the pre-mesh module, so ``dx == 1`` plans lower exactly as
+        before."""
         from repro.kernels.spd_stream.streaming import (
             spd_multistep_halo_streamed,
             spd_multistep_streamed,
@@ -198,13 +294,133 @@ class ShardedStreamKernel:
 
             return jax.lax.fori_loop(0, steps // m, body, local)
 
-        spec = stream_grid_pspec(DEVICE_AXIS)
-        fn = jax.jit(shard_map(
-            local_run, mesh=self.mesh, in_specs=(spec, P(None)),
-            out_specs=spec, check_vma=False,
-        ))
-        self._jitted[key] = fn
-        return fn
+        return local_run
+
+    def _local_run_mesh(self, steps, m, block_h, double_buffer, overlap,
+                        interpret):
+        """The 2-D mesh per-shard loop (DESIGN.md §15): column-halo
+        exchange + guard columns around the row-ring protocol, with the
+        stripe body switched to the kernel's guarded (zero-fill x)
+        variant so the guard columns stand in for the periodic x
+        wrap."""
+        from repro.kernels.spd_stream.streaming import (
+            spd_multistep_halo_streamed,
+            spd_multistep_streamed,
+        )
+
+        dy, halo, halo_x = self.dy, self.halo, self.halo_x
+        dx = self.dx
+        step_fn = self.kernel._step_fn_guarded
+        mh = m * halo
+        mhx = m * halo_x
+        # Row-ring permutes run over DEVICE_AXIS (per mesh column);
+        # column-ring permutes over DEVICE_AXIS_X (per mesh row). A
+        # size-1 row axis degenerates to the identity permute, which
+        # delivers the shard its *own* boundary rows — exactly the
+        # periodic wrap.
+        perm_dn = [(i, (i + 1) % dy) for i in range(dy)]
+        perm_up = [(i, (i - 1) % dy) for i in range(dy)]
+        perm_r = [(j, (j + 1) % dx) for j in range(dx)]  # right cols -> next
+        perm_l = [(j, (j - 1) % dx) for j in range(dx)]  # left cols -> prev
+
+        def local_run(local, scal):
+            p, lh, w = local.shape
+            nblk = lh // block_h
+
+            def shard_launch(ext, scal):
+                return spd_multistep_halo_streamed(
+                    step_fn, ext, scal, m=m, block_h=block_h, halo=halo,
+                    double_buffer=double_buffer, interpret=interpret,
+                )
+
+            def exchange_x(cur):
+                """[left-guard | local | right-guard] via the dx ring."""
+                left = jax.lax.ppermute(
+                    cur[:, :, w - mhx:], DEVICE_AXIS_X, perm_r
+                )
+                right = jax.lax.ppermute(
+                    cur[:, :, :mhx], DEVICE_AXIS_X, perm_l
+                )
+                return jnp.concatenate([left, cur, right], axis=2)
+
+            def body(_, cur):
+                if mh == 0 and mhx == 0:
+                    # Elementwise core: shards never read each other.
+                    return spd_multistep_streamed(
+                        step_fn, cur, scal, m=m, block_h=block_h, halo=0,
+                        double_buffer=double_buffer, interpret=interpret,
+                    )
+                if mh == 0:
+                    # x-only stencil: column exchange, launch over the
+                    # extended width, crop the stale guard columns.
+                    out = spd_multistep_streamed(
+                        step_fn, exchange_x(cur), scal, m=m,
+                        block_h=block_h, halo=0,
+                        double_buffer=double_buffer, interpret=interpret,
+                    )
+                    return out[:, :, mhx:mhx + w]
+                # All first-hop collectives depend only on `cur` and are
+                # issued together: the row exchange (guard rows at local
+                # width) and, when the core reads in x, the column
+                # exchange.
+                up0 = jax.lax.ppermute(
+                    cur[:, lh - mh:, :], DEVICE_AXIS, perm_dn
+                )
+                dn0 = jax.lax.ppermute(cur[:, :mh, :], DEVICE_AXIS, perm_up)
+                if mhx:
+                    curx = exchange_x(cur)
+                    # Corner second hop (DESIGN.md §15): column-permute
+                    # the received row guards' edges, which fetches the
+                    # diagonal neighbors' (mh, mhx) corner blocks — the
+                    # same values a width-extended row exchange would
+                    # have shipped, but only (mh × mhx) elements per
+                    # link.
+                    ul = jax.lax.ppermute(
+                        up0[:, :, w - mhx:], DEVICE_AXIS_X, perm_r
+                    )
+                    ur = jax.lax.ppermute(
+                        up0[:, :, :mhx], DEVICE_AXIS_X, perm_l
+                    )
+                    dl = jax.lax.ppermute(
+                        dn0[:, :, w - mhx:], DEVICE_AXIS_X, perm_r
+                    )
+                    dr = jax.lax.ppermute(
+                        dn0[:, :, :mhx], DEVICE_AXIS_X, perm_l
+                    )
+                    upx = jnp.concatenate([ul, up0, ur], axis=2)
+                    dnx = jnp.concatenate([dl, dn0, dr], axis=2)
+                else:
+                    curx, upx, dnx = cur, up0, dn0
+                wx = w + 2 * mhx
+                pad = jnp.zeros((p, block_h - mh, wx), cur.dtype)
+                if overlap and nblk >= 3:
+                    # Overlap generalization (DESIGN.md §15): the
+                    # interior blocks span the full (extended) shard
+                    # width, so they depend on the column exchange but
+                    # NOT on the row exchange or the corner hop — the
+                    # interior launch runs while those are in flight.
+                    # Every block's stripe assembles the same values as
+                    # the monolithic launch below: bitwise identical.
+                    interior = shard_launch(curx, scal)
+                    ext_top = jnp.concatenate(
+                        [pad, upx, curx[:, :2 * block_h, :]], axis=1
+                    )
+                    ext_bot = jnp.concatenate(
+                        [curx[:, lh - 2 * block_h:, :], dnx, pad], axis=1
+                    )
+                    top = shard_launch(ext_top, scal)
+                    bot = shard_launch(ext_bot, scal)
+                    out = jnp.concatenate([top, interior, bot], axis=1)
+                else:
+                    ext = jnp.concatenate(
+                        [pad, upx, curx, dnx, pad], axis=1
+                    )
+                    out = shard_launch(ext, scal)
+                return out[:, :, mhx:mhx + w] if mhx else out
+
+            return jax.lax.fori_loop(0, steps // m, body, local)
+
+        return local_run
 
     # ---- launches (mirroring StreamKernel) ---------------------------------
 
@@ -226,16 +442,23 @@ class ShardedStreamKernel:
         if overlap is None:
             overlap = self.overlap
         p, h, w = state.shape
-        local_h = shard_height(h, self.d)
+        local_h = shard_height(h, self.dy)
+        local_w = shard_width(w, self.dx)
         if local_h % block_h:
             raise ValueError(
-                f"shard height {local_h} (h={h} over d={self.d}) must be "
+                f"shard height {local_h} (h={h} over d={self.dy}) must be "
                 f"divisible by block_h={block_h}"
             )
         if m * self.halo > block_h:
             raise ValueError(
                 f"m*halo={m * self.halo} must be <= block_h={block_h} "
                 "(halo source)"
+            )
+        if self.dx > 1 and m * self.halo_x > local_w:
+            raise ValueError(
+                f"m*halo_x={m * self.halo_x} must be <= the shard width "
+                f"{local_w} (w={w} over dx={self.dx}; the column guard is "
+                "sourced from one neighbor shard per side)"
             )
         if steps % m:
             raise ValueError(f"steps={steps} must be a multiple of m={m}")
@@ -248,13 +471,14 @@ class ShardedStreamKernel:
         """Advance the grid using a DSE design point's (block_h, m).
 
         The point is legalized *per shard* with the shared
-        :func:`repro.core.legalize.resolve_run_plan` (``d`` = this
-        kernel's shard count). Returns
+        :func:`repro.core.legalize.resolve_run_plan` (``d``/``dx`` =
+        this kernel's mesh shape, DESIGN.md §15). Returns
         ``(result, (block_h, m, double_buffer))``.
         """
         p, h, w = state.shape
         block_h, m, nsteps, double_buffer = resolve_run_plan(
             h, point, steps, halo=self.halo, width=w, words=p, d=self.d,
+            dx=self.dx, halo_x=self.halo_x,
         )
         out = self.run_blocked(
             state, regs, steps=nsteps, m=m, block_h=block_h,

@@ -68,6 +68,12 @@ class StreamWorkload:
     # halo-recompute terms use it, so the model and the kernel legalizer
     # (repro.core.legalize) account the same stripe geometry.
     halo: int = 1
+    # Per-step stencil reach in *columns* (x). ``-1`` — the default —
+    # means "same as ``halo``", which is exact for every shipped core
+    # (the diffusion 5-point and LBM D2Q9 stencils are symmetric), so
+    # existing workload constructions stay valid. The 2-D mesh terms
+    # (DESIGN.md §15) read it through :attr:`stencil_halo_x`.
+    halo_x: int = -1
     # Stream-program stage chain (docs/pipeline.md §program, DESIGN.md
     # §14): per-stage ``(flops_per_elem, words, halo)`` triples in chain
     # order, produced by ``StreamProgram.workload``. Empty for a
@@ -88,7 +94,14 @@ class StreamWorkload:
             elems=elems,
             grid_w=grid_w,
             halo=getattr(report, "halo", 1),
+            halo_x=int(getattr(report, "halo_x", -1)),
         )
+
+    @property
+    def stencil_halo_x(self) -> int:
+        """Effective column stencil reach (``halo_x``, falling back to
+        the row reach ``halo`` when unset — DESIGN.md §15)."""
+        return self.halo_x if self.halo_x >= 0 else self.halo
 
     def fusion_clusters(self, fusion: str = "") -> list[dict]:
         """Partition ``stages`` into fusion clusters (docs/pipeline.md
@@ -453,10 +466,20 @@ class TPUModel:
         double_buffer: bool = True,
         b: int = 1,
         fusion: str = "",
+        dx: int = 1,
     ) -> DesignPoint:
-        """One (block_h, m, d, b, fusion) design point. ``d`` is the
-        device axis — the number of chips the grid is sharded across
-        along y (docs/pipeline.md §distribute); ``b`` the batch axis —
+        """One (block_h, m, d, b, fusion, dx) design point. ``d`` is the
+        device axis — the *total* number of chips; ``dx`` factors it
+        into a ``(dy, dx) = (d // dx, dx)`` mesh (DESIGN.md §15): rows
+        shard across ``dy`` as before, columns across ``dx``. ``dx == 1``
+        reproduces the 1-D ring numbers bit-for-bit. Under ``dx > 1``
+        the per-shard width ``grid_w / dx`` drives the VMEM stripe (plus
+        ``2·m·halo_x`` guard columns), the useful fraction gains the
+        column trapezoid factor ``w_s / (w_s + 2·m·halo_x)``, and the
+        collective term prices the two exchanges separately — the column
+        exchange volume scales with shard *height*, the row exchange
+        with shard *width*, which is what lets the model pick
+        aspect-matched meshes. ``b`` is the batch axis —
         the number of independent simulations stacked into one launch
         (docs/pipeline.md §serve): compute, HBM traffic and VMEM
         residency all scale linearly with ``b``, and the VMEM term is
@@ -474,6 +497,7 @@ class TPUModel:
         """
         t = self.target
         d = int(d)
+        dx = max(1, int(dx))
         b = max(1, int(b))
         pt = DesignPoint(n=d, m=m, feasible=True)
         grid_w = w.grid_w or int(math.sqrt(w.elems))
@@ -484,13 +508,39 @@ class TPUModel:
             if w.stages else ""
         )
 
-        # The device axis decomposes the grid along y into d equal shards
-        # (halo-exchanged over ICI). A height d does not divide has no
+        # Mesh factorization (DESIGN.md §15): d chips arrange as a
+        # (dy, dx) mesh. dx must divide the device count and the width —
+        # the sharded kernel hard-errors on both, so the model marks
+        # non-factorizing points infeasible instead of pricing them.
+        hx = w.stencil_halo_x
+        dy = max(d // dx, 1)
+        shard_w = max(grid_w // dx, 1)
+        if d % dx:
+            pt.feasible = False
+            pt.limits.append(f"mesh {d}%dx={dx}!=0")
+        if dx > 1 and (not w.grid_w or grid_w % dx):
+            pt.feasible = False
+            pt.limits.append(f"colshard {grid_w}%{dx}!=0")
+
+        # The dy axis decomposes the grid along y into dy equal shards
+        # (halo-exchanged over ICI). A height dy does not divide has no
         # executable geometry — the sharded kernel rejects it — so the
         # model marks it infeasible instead of pricing an impossible run.
-        if w.grid_w and d > 1 and (w.elems // w.grid_w) % d:
+        if w.grid_w and dy > 1 and (w.elems // w.grid_w) % dy:
             pt.feasible = False
-            pt.limits.append(f"shard {w.elems // w.grid_w}%{d}!=0")
+            pt.limits.append(f"shard {w.elems // w.grid_w}%{dy}!=0")
+
+        # A block taller than the shard cannot be clamped into the
+        # launch geometry (``resolve_run_plan`` clamps *within* the
+        # shard height) — a dy-heavy mesh on a short grid caps the
+        # legal block_h, which is exactly why wide grids prefer column
+        # sharding (DESIGN.md §15). Non-tiling-but-smaller blocks stay
+        # feasible: the runner clamps them to a legal divisor.
+        if w.grid_w and dy > 1:
+            shard_h = (w.elems // w.grid_w) // dy
+            if shard_h and bh > shard_h:
+                pt.feasible = False
+                pt.limits.append(f"block {bh}>shard_h={shard_h}")
 
         # The batched leading dim runs through the single-device stream
         # kernels only; a batched *and* sharded launch has no executable
@@ -505,16 +555,17 @@ class TPUModel:
         # budgets cannot drift apart. Programs price each cluster's
         # stripe *set* at its composed halo and keep the max (clusters
         # launch one at a time).
+        guard = hx if dx > 1 else 0  # guard columns only when column-sharded
         if clusters is None:
             vmem = stripe_vmem_bytes(
-                bh, m, grid_w, w.words_in, halo=w.halo,
-                double_buffer=double_buffer, b=b,
+                bh, m, shard_w, w.words_in, halo=w.halo,
+                double_buffer=double_buffer, b=b, halo_x=guard,
             )
         else:
             m_c = m if len(clusters) == 1 else 1
             vmem = max(
                 cluster_vmem_bytes(
-                    bh, m_c, grid_w, c["words"], c["halos"],
+                    bh, m_c, shard_w, c["words"], c["halos"],
                     double_buffer, b=b,
                 )
                 for c in clusters
@@ -523,15 +574,19 @@ class TPUModel:
             pt.feasible = False
             pt.limits.append(f"VMEM {vmem}>{t.vmem_bytes}")
 
-        # Halo overhead: the 2·m·halo halo rows are recomputed per block.
-        # The batch axis multiplies sites (b independent grids advance
-        # per launch), leaving the useful fraction unchanged.
+        # Halo overhead: the 2·m·halo halo rows are recomputed per block;
+        # under dx > 1 the 2·m·halo_x guard columns add the analogous
+        # column trapezoid (DESIGN.md §15). The batch axis multiplies
+        # sites (b independent grids advance per launch), leaving the
+        # useful fraction unchanged.
         if clusters is None:
-            useful = bh / (bh + 2 * m * w.halo)
+            colf = shard_w / (shard_w + 2 * m * hx) if dx > 1 else 1.0
+            useful = bh / (bh + 2 * m * w.halo) * colf
             flops = b * w.elems * w.flops_per_elem * m / useful
             hbm_passes = 1
             launches = 1
             exch_halo = m * w.halo  # halo rows exchanged per m-step block
+            exch_halo_x = m * hx  # guard columns exchanged per block
         else:
             m_c = m if len(clusters) == 1 else 1
             # Per-cluster recompute at the cluster's composed halo; the
@@ -541,6 +596,8 @@ class TPUModel:
             flops = sum(
                 b * w.elems * c["flops"] * launches * m_c
                 / (bh / (bh + 2 * m_c * c["halo"]))
+                / ((shard_w / (shard_w + 2 * m_c * c["halo"]))
+                   if dx > 1 else 1.0)
                 for c in clusters
             )
             useful = (b * w.elems * w.flops_per_elem * m) / flops
@@ -551,17 +608,24 @@ class TPUModel:
             exch_halo = sum(
                 launches * m_c * c["halo"] for c in clusters
             )
+            exch_halo_x = exch_halo  # stage halos are symmetric in x/y
             launches = launches * len(clusters)  # total per m-step block
         t_compute = flops / (d * t.vpu_f32_tflops * 1e12)
         t_memory = (
             hbm_passes * b * w.elems * bytes_per_elem
             / (d * t.hbm_gbs * 1e9)
         )
-        # Cross-chip halo exchange (spatial split): 2·m·halo rows/neighbor
-        # (per cluster launch for pipelined programs).
+        # Cross-chip halo exchange: the row exchange moves 2·m·halo rows
+        # per neighbor pair at the per-shard *width*, the column exchange
+        # 2·m·halo_x columns at the per-shard *height* (per cluster
+        # launch for pipelined programs) — two separately priced volumes,
+        # so tall and wide grids prefer different mesh shapes.
+        grid_h = w.elems // grid_w
         halo_bytes = 0.0
-        if d > 1:
-            halo_bytes = 2 * 2 * exch_halo * grid_w * w.words_in * 4
+        if dy > 1:
+            halo_bytes += 2 * 2 * exch_halo * shard_w * w.words_in * 4
+        if dx > 1:
+            halo_bytes += 2 * 2 * exch_halo_x * (grid_h // dy) * w.words_in * 4
         t_coll = halo_bytes / (t.ici_gbs_per_link * 1e9)
 
         # Dispatch latency for the launches beyond the first: 0 for
@@ -599,6 +663,8 @@ class TPUModel:
             "block_rows": bh,
             "vmem_frac": vmem / t.vmem_bytes,
             "d": d,
+            "dx": dx,
+            "dy": dy,
             "double_buffer": bool(double_buffer),
             "b": b,
             "fusion": fusion,
@@ -617,24 +683,31 @@ class TPUModel:
         double_buffer: bool = True,
         b=1,
         fusion: str = "",
+        dx=1,
     ) -> dict[str, np.ndarray]:
-        """Vectorized :meth:`evaluate` over ``bh``/``m``/``d``/``b`` arrays.
+        """Vectorized :meth:`evaluate` over ``bh``/``m``/``d``/``b``/``dx``
+        arrays.
 
         Coordinates broadcast against each other; returns a dict of arrays
         in the broadcast shape, numerically identical to the scalar path.
-        ``d`` is the device axis; the returned dict carries it under both
-        ``"n"`` and ``"d"``. ``b`` is the batch axis (docs/pipeline.md
-        §serve), returned under ``"b"``. ``fusion`` is one partition
-        spec for the whole lattice slab (the sweep loops over specs and
-        concatenates, docs/pipeline.md §program); it is returned under
-        ``"fusion"`` as an object column.
+        ``d`` is the device axis (the *total* chip count); the returned
+        dict carries it under both ``"n"`` and ``"d"``. ``dx`` is the
+        column axis of the ``(dy, dx)`` mesh (DESIGN.md §15), returned
+        under ``"dx"`` with the derived ``"dy"`` alongside. ``b`` is the
+        batch axis (docs/pipeline.md §serve), returned under ``"b"``.
+        ``fusion`` is one partition spec for the whole lattice slab (the
+        sweep loops over specs and concatenates, docs/pipeline.md
+        §program); it is returned under ``"fusion"`` as an object column.
         """
         t = self.target
         bh = np.asarray(bh, dtype=np.int64)
         m = np.asarray(m, dtype=np.int64)
         chips = np.asarray(d, dtype=np.int64)
         batch = np.maximum(np.asarray(b, dtype=np.int64), 1)
-        bh, m, chips, batch = np.broadcast_arrays(bh, m, chips, batch)
+        dxa = np.maximum(np.asarray(dx, dtype=np.int64), 1)
+        bh, m, chips, batch, dxa = np.broadcast_arrays(
+            bh, m, chips, batch, dxa
+        )
         grid_w = w.grid_w or int(math.sqrt(w.elems))
         bytes_per_elem = 4 * (w.words_in + w.words_out)
         clusters = w.fusion_clusters(fusion) if w.stages else None
@@ -643,41 +716,68 @@ class TPUModel:
             if w.stages else ""
         )
 
+        # Mesh factorization (DESIGN.md §15) — same derivations as the
+        # scalar path, elementwise.
+        hx = w.stencil_halo_x
+        dya = np.maximum(chips // dxa, 1)
+        shard_w = np.maximum(grid_w // dxa, 1)
+
+        guard = np.where(dxa > 1, hx, 0)
         if clusters is None:
             vmem = stripe_vmem_bytes(
-                bh, m, grid_w, w.words_in, halo=w.halo,
-                double_buffer=double_buffer, b=batch,
+                bh, m, shard_w, w.words_in, halo=w.halo,
+                double_buffer=double_buffer, b=batch, halo_x=guard,
             )
         else:
             m_c = np.where(len(clusters) == 1, m, 1)
             vmem = np.maximum.reduce([
                 cluster_vmem_bytes(
-                    bh, m_c, grid_w, c["words"], c["halos"],
+                    bh, m_c, shard_w, c["words"], c["halos"],
                     double_buffer, b=batch,
                 )
                 for c in clusters
             ])
         feasible = vmem <= t.vmem_bytes
+        # the mesh must factor the device count (scalar path's hard limit)
+        feasible = feasible & (chips % dxa == 0)
         if w.grid_w:
-            # y-sharding needs d equal shards (same check as the scalar
-            # path and the repro.core.distribute kernel's hard error).
+            # y-sharding needs dy equal shards, x-sharding dx equal
+            # shards (same checks as the scalar path and the
+            # repro.core.distribute kernel's hard errors).
             grid_h = w.elems // w.grid_w
-            feasible = feasible & ((chips == 1) | (grid_h % chips == 0))
+            feasible = feasible & ((dya == 1) | (grid_h % dya == 0))
+            feasible = feasible & ((dxa == 1) | (grid_w % dxa == 0))
+            # blocks taller than the shard cannot be clamped into the
+            # launch geometry (scalar path's limit)
+            shard_h = np.maximum(grid_h // dya, 1)
+            feasible = feasible & ((dya == 1) | (bh <= shard_h))
+        else:
+            # no known width: column sharding has no executable geometry
+            feasible = feasible & (dxa == 1)
         # batched + sharded has no executable geometry (scalar path's limit)
         feasible = feasible & ((batch == 1) | (chips == 1))
 
         if clusters is None:
-            useful = bh / (bh + 2 * m * w.halo)
+            colf = np.where(
+                dxa > 1, shard_w / (shard_w + 2 * m * hx), 1.0
+            )
+            useful = bh / (bh + 2 * m * w.halo) * colf
             flops = batch * w.elems * w.flops_per_elem * m / useful
             hbm_passes = np.ones_like(m, dtype=np.float64)
             launches = np.ones_like(m, dtype=np.float64)
             exch_halo = (m * w.halo).astype(np.float64)
+            exch_halo_x = (m * hx).astype(np.float64)
         else:
             m_c = np.where(len(clusters) == 1, m, 1)
             launches = m // m_c
             flops = sum(
                 batch * w.elems * c["flops"] * launches * m_c
                 / (bh / (bh + 2 * m_c * c["halo"]))
+                / np.where(
+                    dxa > 1,
+                    shard_w / (shard_w + 2 * m_c * c["halo"]),
+                    1.0,
+                )
                 for c in clusters
             )
             useful = (batch * w.elems * w.flops_per_elem * m) / flops
@@ -688,14 +788,20 @@ class TPUModel:
                 (launches * m_c * c["halo"]).astype(np.float64)
                 for c in clusters
             )
+            exch_halo_x = exch_halo  # stage halos are symmetric in x/y
             launches = (launches * len(clusters)).astype(np.float64)
         t_compute = flops / (chips * t.vpu_f32_tflops * 1e12)
         t_memory = (
             hbm_passes * batch * w.elems * bytes_per_elem
             / (chips * t.hbm_gbs * 1e9)
         )
+        # Two exchange volumes (DESIGN.md §15): rows at shard width over
+        # dy, guard columns at shard height over dx.
+        shard_h = (w.elems // grid_w) // dya
         halo_bytes = np.where(
-            chips > 1, 2.0 * 2 * exch_halo * grid_w * w.words_in * 4, 0.0
+            dya > 1, 2.0 * 2 * exch_halo * shard_w * w.words_in * 4, 0.0
+        ) + np.where(
+            dxa > 1, 2.0 * 2 * exch_halo_x * shard_h * w.words_in * 4, 0.0
         )
         t_coll = halo_bytes / (t.ici_gbs_per_link * 1e9)
 
@@ -719,6 +825,8 @@ class TPUModel:
         return {
             "n": chips,
             "d": chips,
+            "dx": dxa,
+            "dy": dya,
             "m": m,
             "b": batch,
             "block_rows": bh,

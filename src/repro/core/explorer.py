@@ -206,6 +206,8 @@ class Sweep:
             kwargs["b"] = int(self.data["b"][i])
         if "fusion" in self.data:  # program sweeps (docs/pipeline.md §program)
             kwargs["fusion"] = str(self.data["fusion"][i])
+        if "dx" in self.data:  # mesh-shape sweeps (DESIGN.md §15)
+            kwargs["dx"] = int(self.data["dx"][i])
         return self.model.evaluate(
             self.workload,
             int(self.data["block_rows"][i]),
@@ -301,11 +303,19 @@ class Explorer:
         double_buffer: bool = True,
         b_values: Sequence[int] = (1,),
         fusion_values: Sequence[str] = ("",),
+        dx_values: Sequence[int] = (1,),
     ) -> Sweep:
-        """Evaluate the (block_h, m, d[, b][, fusion]) lattice batched.
+        """Evaluate the (block_h, m, d[, b][, fusion][, dx]) lattice batched.
 
-        ``d`` is the device axis — chips the grid is sharded across
-        along y (docs/pipeline.md §distribute). ``double_buffer``
+        ``d`` is the device axis — the *total* chip count the grid is
+        sharded across (docs/pipeline.md §distribute). ``dx_values``
+        adds the mesh-shape axis (DESIGN.md §15): each point's ``d``
+        factors as a ``(dy, dx) = (d // dx, dx)`` mesh, with
+        non-factorizing combinations marked infeasible by the model —
+        so passing the full ``device_axis_values(...)`` list for both
+        ``d_values`` and ``dx_values`` enumerates exactly the legal
+        factorizations. The ``(1,)`` default keeps classic row-ring
+        sweeps unchanged. ``double_buffer``
         threads through to both the batched evaluation and the scalar
         ``Sweep.point`` re-materialization. ``b_values`` adds the batch
         axis — independent simulations stacked into one launch
@@ -317,18 +327,19 @@ class Explorer:
         program ``stages``; the ``("",)`` default keeps single-core
         sweeps unchanged.
         """
-        bh, m, d, b = np.meshgrid(
+        bh, m, d, b, dxg = np.meshgrid(
             np.asarray(bh_values, np.int64),
             np.asarray(m_values, np.int64),
             np.asarray(d_values, np.int64),
             np.asarray(b_values, np.int64),
+            np.asarray(dx_values, np.int64),
             indexing="ij",
         )
         chunks = [
             self.tpu.evaluate_batch(
                 self.workload, bh.ravel(), m.ravel(), d=d.ravel(),
                 double_buffer=double_buffer, b=b.ravel(),
-                fusion=str(spec),
+                fusion=str(spec), dx=dxg.ravel(),
             )
             for spec in fusion_values
         ]
@@ -643,16 +654,21 @@ def render_executed(points: Sequence[ExecutedPoint]) -> str:
     wall time came from the measurement cache (or this search already
     timed the same plan). ``fuse`` is the program fusion partition the
     point ran as (docs/pipeline.md §program) — ``-`` for single-core
-    plans.
+    plans. ``mesh`` is the point's device mesh ``dy x dx``
+    (DESIGN.md §15) — ``1x1`` for single-device plans.
     """
     head = (
-        "| block_h | m | d | db | fuse | steps | model GF/s | calib GF/s "
+        "| block_h | m | d | mesh | db | fuse | steps | model GF/s "
+        "| calib GF/s "
         "| measured GF/s | MLUPS | rel err | src | mode |\n"
-        "|---------|---|---|----|------|-------|------------|------------"
+        "|---------|---|---|------|----|------|-------|------------"
+        "|------------"
         "|---------------|-------|---------|-----|------|"
     )
     rows = [
         f"| {e.block_h} | {e.m} | {e.d} | "
+        f"{e.d // max(getattr(e, 'dx', 1) or 1, 1)}"
+        f"x{getattr(e, 'dx', 1)} | "
         f"{'pp' if e.double_buffer else '1b'} | "
         f"{e.fusion or '-'} | {e.steps} | "
         f"{e.predicted_gflops:10.1f} | "

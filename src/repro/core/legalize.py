@@ -24,6 +24,17 @@ legalized against the shard height ``h / d``, with the same VMEM stripe
 accounting a single device uses (every shard keeps its own
 ``block_h + 2·m·halo``-row stripes resident).
 
+``dx`` factors the device count into a 2-D mesh ``(dy, dx)`` with
+``dy = d / dx`` (DESIGN.md §15): rows shard over ``dy`` as before and
+columns shard over ``dx``, so the shard geometry is
+``(h / dy, width / dx)``. Legalization then runs against the shard
+height ``h / dy`` and prices stripes at the per-shard width plus the
+``2·m·halo_x`` guard columns each fused launch keeps resident — wide
+grids legalize larger ``block_h``/``m`` under ``dx > 1`` because the
+per-stripe width term shrinks by ``dx``. A width the column axis does
+not divide is a hard error (:func:`shard_width`), exactly mirroring the
+row axis.
+
 ``double_buffer`` is a first-class plan dimension (docs/pipeline.md
 §stream): with it on, the streaming kernels ping/pong two stripe
 buffers so copy overlaps compute, and every stripe is accounted at
@@ -81,6 +92,7 @@ VMEM_DOUBLE_BUFFER = 2
 #: plan dimension is added *here* and nowhere else.
 PLAN_FIELDS = (
     "block_h", "m", "steps", "d", "reps", "double_buffer", "b", "fusion",
+    "dx",
 )
 
 
@@ -95,6 +107,12 @@ class RunPlan:
     sizes for stream programs — carried as plan identity so a fused and
     a pipelined execution of the same lattice point are distinct
     measurements.
+
+    ``dx`` is the column axis of the 2-D device mesh (DESIGN.md §15):
+    ``d`` stays the *total* device count (the compatible ``dy·dx``
+    spelling, so journals and caches written by the 1-D ring replay
+    unchanged) and ``dx`` factors it, ``dy = d / dx``. ``dx = 1`` is
+    the legacy row-ring plan.
     """
 
     block_h: int
@@ -105,25 +123,28 @@ class RunPlan:
     double_buffer: bool = True
     b: int = 1
     fusion: str = ""
+    dx: int = 1
 
     def key(self) -> tuple:
         """Hashable identity tuple, ordered exactly as PLAN_FIELDS."""
         return (self.block_h, self.m, self.steps, self.d, self.reps,
-                bool(self.double_buffer), self.b, self.fusion)
+                bool(self.double_buffer), self.b, self.fusion, self.dx)
 
     def as_dict(self) -> dict:
         return {
             "block_h": self.block_h, "m": self.m, "steps": self.steps,
             "d": self.d, "reps": self.reps,
             "double_buffer": bool(self.double_buffer), "b": self.b,
-            "fusion": self.fusion,
+            "fusion": self.fusion, "dx": self.dx,
         }
 
     @classmethod
     def from_dict(cls, rec: dict) -> "RunPlan":
         """Rebuild a plan from a journal/report record, tolerating
         records written before newer plan dimensions existed (absent
-        ``double_buffer``/``b``/``fusion`` take their defaults)."""
+        ``double_buffer``/``b``/``fusion``/``dx`` take their
+        defaults — a ``d``-only 1-D-ring record is the ``dx = 1``
+        mesh, DESIGN.md §15)."""
         return cls(
             block_h=int(rec["block_h"]), m=int(rec["m"]),
             steps=int(rec["steps"]), d=int(rec["d"]),
@@ -131,6 +152,7 @@ class RunPlan:
             double_buffer=bool(rec.get("double_buffer", True)),
             b=int(rec.get("b", 1)),
             fusion=str(rec.get("fusion", "") or ""),
+            dx=int(rec.get("dx", 1)),
         )
 
 
@@ -166,7 +188,7 @@ def parse_fusion(spec: str, nstages: int) -> tuple[int, ...]:
 
 def stripe_vmem_bytes(block_h, m, width: int, words: int,
                       halo: int = 1, double_buffer: bool = True,
-                      b: int = 1):
+                      b: int = 1, halo_x: int = 0):
     """VMEM bytes of one (block_h + 2·m·halo)-row f32 stripe of ``words``
     fields, matching the residency term of ``TPUModel.evaluate``.
 
@@ -178,6 +200,13 @@ def stripe_vmem_bytes(block_h, m, width: int, words: int,
     place the batched geometry is priced, so model and legalizer cannot
     drift. ``block_h``/``m`` may be numpy arrays (the model's batched
     lattice evaluation broadcasts through).
+
+    ``halo_x`` prices the guard columns of a column-sharded stripe
+    (DESIGN.md §15): under ``dx > 1`` every fused launch keeps
+    ``2·m·halo_x`` neighbor columns resident alongside the per-shard
+    ``width``, mirroring the ``2·m·halo`` guard rows. Callers pass 0
+    when the column axis is unsharded, keeping legacy accounting
+    byte-identical.
     """
     rows = block_h + 2 * m * halo
     mult = VMEM_DOUBLE_BUFFER if double_buffer else 1
@@ -185,7 +214,29 @@ def stripe_vmem_bytes(block_h, m, width: int, words: int,
         b = max(int(b), 1)
     # else: array batch-axis values broadcast straight through (the
     # model's batched lattice evaluation pre-clamps them)
-    return rows * max(width, 1) * max(words, 1) * 4 * mult * b
+    if getattr(width, "shape", None) in (None, ()):  # scalar: clamp
+        width = max(int(width), 1)
+    cols = width + 2 * m * halo_x
+    return rows * cols * max(words, 1) * 4 * mult * b
+
+
+def shard_width(w: int, dx: int) -> int:
+    """Columns per shard when ``w`` grid columns split across ``dx``
+    devices (the column axis of the 2-D mesh, DESIGN.md §15).
+
+    Exactly mirrors :func:`shard_height`: a width the column axis does
+    not divide is a hard error — there is no "closest" mesh shape to
+    fall back to.
+    """
+    dx = int(dx)
+    if dx < 1:
+        raise ValueError(f"column device axis must be >= 1, got dx={dx}")
+    if w % dx:
+        raise ValueError(
+            f"grid width w={w} does not split into dx={dx} equal shards "
+            f"(column-sharded stream kernels need w % dx == 0)"
+        )
+    return w // dx
 
 
 def shard_height(h: int, d: int) -> int:
@@ -207,12 +258,34 @@ def shard_height(h: int, d: int) -> int:
     return h // d
 
 
+def mesh_shape(d: int, dx: int) -> tuple[int, int]:
+    """Factor a total device count into the ``(dy, dx)`` mesh
+    (DESIGN.md §15).
+
+    ``d`` stays the total device count everywhere (plan identity,
+    journals, caches); ``dx`` must divide it — a non-factorizing pair is
+    a hard error, like an unshardable grid.
+    """
+    d, dx = int(d), int(dx)
+    if d < 1:
+        raise ValueError(f"device axis must be >= 1, got d={d}")
+    if dx < 1:
+        raise ValueError(f"column device axis must be >= 1, got dx={dx}")
+    if d % dx:
+        raise ValueError(
+            f"mesh dx={dx} does not divide the device count d={d} "
+            f"(a (dy, dx) mesh needs d == dy * dx)"
+        )
+    return d // dx, dx
+
+
 def legal_block_values(h: int, m: int, *, halo: int = 1,
                        width: int = 0, words: int = 0,
                        vmem_bytes: int = VMEM_BYTES,
                        d: int = 1,
                        double_buffer: bool = True,
-                       b: int = 1) -> tuple[int, ...]:
+                       b: int = 1, dx: int = 1,
+                       halo_x: int = 0) -> tuple[int, ...]:
     """Every legal ``block_h`` for ``m`` fused steps on an ``h``-row grid.
 
     The ascending chain of shard-height divisors that can source the
@@ -224,10 +297,18 @@ def legal_block_values(h: int, m: int, *, halo: int = 1,
     makes the block height a first-class searched dimension rather than
     a legalization byproduct; an empty tuple means no block is legal for
     this ``m`` (the neighborhood move is simply not available).
+
+    ``dx`` factors ``d`` into the 2-D mesh (DESIGN.md §15): the divisor
+    chain runs over the shard height ``h / dy`` and stripes are priced
+    at the per-shard width ``width / dx`` plus the ``2·m·halo_x`` guard
+    columns.
     """
     if h < 1:
         raise ValueError(f"grid height must be positive, got {h}")
-    local_h = shard_height(h, d)
+    dy, dx = mesh_shape(d, dx)
+    local_h = shard_height(h, dy)
+    local_w = shard_width(width, dx) if width else width
+    guard_x = max(0, int(halo_x)) if dx > 1 else 0
     halo = max(0, int(halo))
     m = max(1, min(int(m), local_h))
     floor = max(1, m * halo)
@@ -238,8 +319,9 @@ def legal_block_values(h: int, m: int, *, halo: int = 1,
     if width and words:
         legal = [
             v for v in legal
-            if stripe_vmem_bytes(v, m, width, words, halo,
-                                 double_buffer, b=b) <= vmem_bytes
+            if stripe_vmem_bytes(v, m, local_w, words, halo,
+                                 double_buffer, b=b,
+                                 halo_x=guard_x) <= vmem_bytes
         ]
     return tuple(legal)
 
@@ -248,7 +330,8 @@ def blocking_plan(h: int, block_h: int, m: int, *, halo: int = 1,
                   width: int = 0, words: int = 0,
                   vmem_bytes: int = VMEM_BYTES, d: int = 1,
                   double_buffer: bool = True,
-                  b: int = 1) -> tuple[int, int, bool]:
+                  b: int = 1, dx: int = 1,
+                  halo_x: int = 0) -> tuple[int, int, bool]:
     """Legalize a model-chosen (block_h, m) for a grid of ``h`` rows.
 
     The temporal-blocking kernels require ``block_h | h`` and
@@ -283,10 +366,19 @@ def blocking_plan(h: int, block_h: int, m: int, *, halo: int = 1,
     the same divisor chain, with every stripe priced at ``b`` members'
     residency — a batch that would overflow VMEM shrinks the block (or
     drops to single-buffer) exactly as a wider grid would.
+
+    ``dx > 1`` legalizes against the 2-D mesh shard geometry
+    ``(h / dy, width / dx)`` (DESIGN.md §15): the divisor chain runs
+    over the ``dy``-shard height and every stripe is priced at the
+    per-shard width plus its ``2·m·halo_x`` guard columns — the reason
+    wide grids legalize larger blocks under column sharding.
     """
     if h < 1:
         raise ValueError(f"grid height must be positive, got {h}")
-    local_h = shard_height(h, d)
+    dy, dx = mesh_shape(d, dx)
+    local_h = shard_height(h, dy)
+    width = shard_width(width, dx) if width else width
+    halo_x = max(0, int(halo_x)) if dx > 1 else 0
     halo = max(0, int(halo))
     m = max(1, min(int(m), local_h))
     floor = max(1, m * halo)
@@ -308,7 +400,8 @@ def blocking_plan(h: int, block_h: int, m: int, *, halo: int = 1,
         fits = [
             v for v in legal
             if stripe_vmem_bytes(v, m, width, words, halo,
-                                 double_buffer, b=b) <= vmem_bytes
+                                 double_buffer, b=b,
+                                 halo_x=halo_x) <= vmem_bytes
         ]
         if not fits and double_buffer:
             # Streaming fallback: a single-buffered stripe has the whole
@@ -318,7 +411,8 @@ def blocking_plan(h: int, block_h: int, m: int, *, halo: int = 1,
             fits = [
                 v for v in legal
                 if stripe_vmem_bytes(v, m, width, words, halo,
-                                     double_buffer, b=b) <= vmem_bytes
+                                     double_buffer, b=b,
+                                     halo_x=halo_x) <= vmem_bytes
             ]
         if not fits:  # no legal block fits: fail loudly, not on-device
             smallest = min(legal)
@@ -327,7 +421,7 @@ def blocking_plan(h: int, block_h: int, m: int, *, halo: int = 1,
                 f"the single-buffer streaming fallback "
                 f"(double_buffer=False): smallest stripe "
                 f"(block_h={smallest}, m={m}, halo={halo}, b={b}) needs "
-                f"{stripe_vmem_bytes(smallest, m, width, words, halo, False, b=b)}"
+                f"{stripe_vmem_bytes(smallest, m, width, words, halo, False, b=b, halo_x=halo_x)}"
                 f" B > budget {vmem_bytes} B"
             )
         legal = fits
@@ -339,7 +433,8 @@ def constraint_violation(h: int, block_h: int, m: int, *, halo: int = 1,
                          width: int = 0, words: int = 0,
                          vmem_bytes: int = VMEM_BYTES, d: int = 1,
                          double_buffer: bool = True,
-                         b: int = 1) -> float:
+                         b: int = 1, dx: int = 1,
+                         halo_x: int = 0) -> float:
     """Continuous distance-to-feasibility of a (block_h, m, d) request.
 
     Exactly ``0.0`` iff :func:`blocking_plan` would produce a legal plan
@@ -362,17 +457,27 @@ def constraint_violation(h: int, block_h: int, m: int, *, halo: int = 1,
     * **unsourceable halo** — the per-step stencil reach exceeds the
       shard height: ``1 +`` the fractional excess (strictly above every
       VMEM violation of the same order);
-    * **unshardable grid** — ``h % d != 0`` has no closest legal plan
-      at all: ``1 +`` the fractional remainder.
+    * **unshardable grid** — ``h % dy != 0`` (or, for a 2-D mesh,
+      ``width % dx != 0`` / ``d % dx != 0``, DESIGN.md §15) has no
+      closest legal plan at all: ``1 +`` the fractional remainder.
     """
     if h < 1:
         raise ValueError(f"grid height must be positive, got {h}")
-    d = int(d)
+    d, dx = int(d), int(dx)
     if d < 1:
         raise ValueError(f"device axis must be >= 1, got d={d}")
-    if h % d:
-        return 1.0 + (h % d) / d
-    local_h = h // d
+    if dx < 1:
+        raise ValueError(f"column device axis must be >= 1, got dx={dx}")
+    if d % dx:
+        return 1.0 + (d % dx) / dx
+    dy = d // dx
+    if h % dy:
+        return 1.0 + (h % dy) / dy
+    if width and width % dx:
+        return 1.0 + (width % dx) / dx
+    local_h = h // dy
+    width = width // dx if width else width
+    halo_x = max(0, int(halo_x)) if dx > 1 else 0
     halo = max(0, int(halo))
     m = max(1, min(int(m), local_h))
     if halo > local_h:
@@ -393,14 +498,16 @@ def constraint_violation(h: int, block_h: int, m: int, *, halo: int = 1,
         legal = [v for v in divisors if v >= floor]
     b = max(1, int(b))
     need = min(
-        stripe_vmem_bytes(v, m, width, words, halo, double_buffer, b=b)
+        stripe_vmem_bytes(v, m, width, words, halo, double_buffer, b=b,
+                          halo_x=halo_x)
         for v in legal
     )
     if need <= vmem_bytes:
         return 0.0
     if double_buffer:
         need = min(
-            stripe_vmem_bytes(v, m, width, words, halo, False, b=b)
+            stripe_vmem_bytes(v, m, width, words, halo, False, b=b,
+                              halo_x=halo_x)
             for v in legal
         )
         if need <= vmem_bytes:
@@ -434,7 +541,7 @@ def program_blocking_plan(h: int, block_h: int, m: int, *,
                           stages, fusion: str = "", width: int = 0,
                           vmem_bytes: int = VMEM_BYTES, d: int = 1,
                           double_buffer: bool = True,
-                          b: int = 1) -> tuple[int, int, bool]:
+                          b: int = 1, dx: int = 1) -> tuple[int, int, bool]:
     """Legalize a (block_h, m) plan for a stream *program* under a
     fusion partition (docs/pipeline.md §program, DESIGN.md §14).
 
@@ -453,6 +560,11 @@ def program_blocking_plan(h: int, block_h: int, m: int, *,
     count is ``m`` iff the partition has one cluster, else 1. A
     partition with no legal block raises a ``ValueError`` naming the
     offending cluster (better than an opaque on-device VMEM failure).
+
+    ``dx > 1`` legalizes against the 2-D mesh shard geometry
+    (DESIGN.md §15): the divisor chain runs over the ``dy``-shard height
+    and every cluster's stripe set is priced at the per-shard width
+    ``width / dx``.
     """
     stages = [(int(w), int(hh)) for (w, hh) in stages]
     sizes = parse_fusion(fusion, len(stages))
@@ -460,7 +572,9 @@ def program_blocking_plan(h: int, block_h: int, m: int, *,
     for s in sizes:
         clusters.append(stages[lo:lo + s])
         lo += s
-    local_h = shard_height(h, d)
+    dy, dx = mesh_shape(d, dx)
+    local_h = shard_height(h, dy)
+    width = shard_width(width, dx) if width else width
     fused = len(clusters) == 1
     m = max(1, min(int(m), local_h))
     b = max(1, int(b))
@@ -536,6 +650,7 @@ def resolve_run_plan(
     width: int = 0, words: int = 0, d: int = 1,
     vmem_bytes: int = VMEM_BYTES, b: int | None = None,
     stages=None, fusion: str | None = None,
+    dx: int | None = None, halo_x: int = 0,
 ) -> tuple[int, int, int, bool]:
     """Turn a DSE design point into a concrete
     (block_h, m, steps, double_buffer) plan.
@@ -562,6 +677,11 @@ def resolve_run_plan(
     :func:`program_blocking_plan` instead of the single-core
     :func:`blocking_plan`. The return shape is unchanged — fusion, like
     ``b``, is identity the caller already holds.
+
+    ``dx`` is the mesh column axis (DESIGN.md §15): ``None`` reads the
+    point's ``detail['dx']`` (1 when absent, matching pre-mesh points),
+    an explicit value overrides; ``halo_x`` is the per-step x stencil
+    reach the guard columns must cover.
     """
     detail = getattr(point, "detail", None) or {}
     requested_db = bool(detail.get("double_buffer", True))
@@ -569,17 +689,21 @@ def resolve_run_plan(
         b = int(detail.get("b", 1))
     if fusion is None:
         fusion = str(detail.get("fusion", "") or "")
+    if dx is None:
+        dx = int(detail.get("dx", 1))
     if stages is not None:
         block_h, m, double_buffer = program_blocking_plan(
             h, int(point.detail["block_rows"]), int(point.m),
             stages=stages, fusion=fusion, width=width,
             vmem_bytes=vmem_bytes, d=d, double_buffer=requested_db, b=b,
+            dx=dx,
         )
     else:
         block_h, m, double_buffer = blocking_plan(
             h, int(point.detail["block_rows"]), int(point.m),
             halo=halo, width=width, words=words, d=d,
             vmem_bytes=vmem_bytes, double_buffer=requested_db, b=b,
+            dx=dx, halo_x=halo_x,
         )
     nsteps = m if steps is None else max(m, (steps // m) * m)
     return block_h, m, nsteps, double_buffer
@@ -594,9 +718,11 @@ __all__ = [
     "cluster_vmem_bytes",
     "constraint_violation",
     "legal_block_values",
+    "mesh_shape",
     "parse_fusion",
     "program_blocking_plan",
     "resolve_run_plan",
     "shard_height",
+    "shard_width",
     "stripe_vmem_bytes",
 ]

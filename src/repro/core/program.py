@@ -438,7 +438,7 @@ class ProgramKernel:
 
     def run_blocked(self, state, regs: Sequence = (), *, steps: int,
                     m: int, block_h: int, double_buffer: bool = True,
-                    interpret: bool = True, d: int = 1):
+                    interpret: bool = True, d: int = 1, dx: int = 1):
         """Advance ``steps`` program steps under this partition.
 
         Fused (one cluster): the standard ``m``-blocked launch chain.
@@ -446,13 +446,15 @@ class ProgramKernel:
         host-visible dispatch granularity but does not change the
         arithmetic — a program step is always one pass through every
         cluster). ``d > 1`` shards every cluster launch across the
-        device ring (docs/pipeline.md §distribute).
+        device mesh ``(d // dx, dx)`` — the row ring when ``dx == 1``
+        (docs/pipeline.md §distribute, DESIGN.md §15).
         """
         scals = self._scals(regs)  # validates the register count
         if d > 1:
             return self._run_sharded(
                 state, regs, steps=steps, m=m, block_h=block_h,
                 double_buffer=double_buffer, interpret=interpret, d=d,
+                dx=dx,
             )
         if not self.pipelined:
             (a, b), kern = self.spans[0], self.clusters[0]
@@ -467,10 +469,10 @@ class ProgramKernel:
         )
 
     def _run_sharded(self, state, regs, *, steps, m, block_h,
-                     double_buffer, interpret, d):
+                     double_buffer, interpret, d, dx=1):
         if not self.pipelined:
             (a, b), kern = self.spans[0], self.clusters[0]
-            return kern.sharded(d).run_blocked(
+            return kern.sharded(d, dx=dx).run_blocked(
                 state, tuple(regs)[self.program.reg_slice(a, b)],
                 steps=steps, m=m, block_h=block_h,
                 double_buffer=double_buffer, interpret=interpret,
@@ -480,7 +482,7 @@ class ProgramKernel:
         # between launches; only the dispatch returns to the host.
         for _ in range(int(steps)):
             for kern, (a, b) in zip(self.clusters, self.spans):
-                state = kern.sharded(d).run_blocked(
+                state = kern.sharded(d, dx=dx).run_blocked(
                     state, tuple(regs)[self.program.reg_slice(a, b)],
                     steps=1, m=1, block_h=block_h,
                     double_buffer=double_buffer, interpret=interpret,
@@ -542,16 +544,17 @@ class ProgramKernel:
 def program_run_factory(program: StreamProgram, state, regs,
                         interpret: bool = True):
     """Adapt a program + initial state into the search runner's
-    ``run_factory(nsteps, m, block_h, d, double_buffer, b, fusion)``
-    protocol (docs/pipeline.md §search): the fusion partition selects
-    the cached :class:`ProgramKernel`, everything else parameterizes
-    its launch. Batched program launches (``b > 1``) are declared
-    unsupported (``None`` — the point is skipped), matching the model's
-    infeasible cell.
+    ``run_factory(nsteps, m, block_h, d, double_buffer, b, fusion,
+    dx)`` protocol (docs/pipeline.md §search): the fusion partition
+    selects the cached :class:`ProgramKernel`, everything else
+    parameterizes its launch — ``dx`` picks the device-mesh column
+    count (DESIGN.md §15). Batched program launches (``b > 1``) are
+    declared unsupported (``None`` — the point is skipped), matching
+    the model's infeasible cell.
     """
 
     def run_factory(nsteps, m, block_h, d, double_buffer=True, b=1,
-                    fusion=""):
+                    fusion="", dx=1):
         if b > 1:
             return None
         pk = program.kernel(fusion)
@@ -560,6 +563,7 @@ def program_run_factory(program: StreamProgram, state, regs,
             return pk.run_blocked(
                 state, regs, steps=nsteps, m=m, block_h=block_h,
                 double_buffer=double_buffer, interpret=interpret, d=d,
+                dx=dx,
             )
 
         return run

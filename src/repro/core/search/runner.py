@@ -87,6 +87,20 @@ def _point_fusion(point) -> str:
     return str(detail.get("fusion", "") or "")
 
 
+def _point_dx(point) -> int:
+    """The mesh column axis a design point was modeled at (1 if none).
+
+    Carried in ``DesignPoint.detail`` (set by ``TPUModel.evaluate``,
+    DESIGN.md §15) so pre-mesh points — older studies, FPGA points —
+    legalize as the 1-D row ring.
+    """
+    detail = getattr(point, "detail", None) or {}
+    try:
+        return max(1, int(detail.get("dx", 1)))
+    except (TypeError, ValueError):
+        return 1
+
+
 # RunPlan itself is single-sourced in ``repro.core.legalize`` (one
 # PLAN_FIELDS tuple shared by the legalizer, the runner, the study
 # journal and the measurement-cache key space — docs/pipeline.md
@@ -104,6 +118,7 @@ EXECUTED_POINT_FIELDS = (
     "block_h",
     "m",
     "d",
+    "dx",
     "double_buffer",
     "b",
     "fusion",
@@ -147,6 +162,8 @@ class ExecutedPoint:
     double_buffer: bool = True  # streamed buffer protocol actually run
     b: int = 1  # batch axis: independent simulations stacked in the launch
     fusion: str = ""  # program fusion partition actually run ("" = single core)
+    dx: int = 1  # mesh column axis: the d devices ran as a (d//dx, dx)
+    #              mesh (DESIGN.md §15); 1 = the 1-D row ring
 
     def as_dict(self) -> dict:
         """JSON-ready record — the one serialization shared by the CLI's
@@ -157,6 +174,7 @@ class ExecutedPoint:
             "block_h": int(self.block_h),
             "m": int(self.m),
             "d": int(self.d),
+            "dx": int(self.dx),
             "double_buffer": bool(self.double_buffer),
             "b": int(self.b),
             "fusion": str(self.fusion),
@@ -180,18 +198,20 @@ class ExecutedPoint:
 def kernel_run_factory(kern, state, regs: Sequence, interpret: bool):
     """The default back end: a codegen'd StreamKernel, sharded for d>1.
 
-    Returns the ``run_factory(nsteps, m, block_h, d, double_buffer, b)``
-    the runner calls; ``d > 1`` plans go through ``kern.sharded(d)``
-    (cached per d on the kernel, docs/pipeline.md §distribute), and
-    ``double_buffer`` selects the streamed launch's buffer protocol
-    (docs/pipeline.md §stream). ``b > 1`` plans tile ``state`` into a
-    ``(b, P, H, W)`` batch (docs/pipeline.md §serve); batched sharded
-    geometry does not exist, so ``b > 1`` with ``d > 1`` declines.
+    Returns the ``run_factory(nsteps, m, block_h, d, double_buffer, b,
+    dx)`` the runner calls; ``d > 1`` plans go through
+    ``kern.sharded(d, dx=dx)`` (cached per ``(d, dx)`` on the kernel,
+    docs/pipeline.md §distribute) — ``dx > 1`` runs the ``(d//dx, dx)``
+    device mesh (DESIGN.md §15) — and ``double_buffer`` selects the
+    streamed launch's buffer protocol (docs/pipeline.md §stream).
+    ``b > 1`` plans tile ``state`` into a ``(b, P, H, W)`` batch
+    (docs/pipeline.md §serve); batched sharded geometry does not exist,
+    so ``b > 1`` with ``d > 1`` declines.
     """
     import jax.numpy as jnp
 
     def run_factory(nsteps: int, m: int, block_h: int, d: int,
-                    double_buffer: bool = True, b: int = 1):
+                    double_buffer: bool = True, b: int = 1, dx: int = 1):
         if b > 1:
             if d > 1:
                 return None  # no batched sharded launch (see TPUModel)
@@ -205,7 +225,7 @@ def kernel_run_factory(kern, state, regs: Sequence, interpret: bool):
                 state, regs, steps=nsteps, m=m, block_h=block_h,
                 double_buffer=double_buffer, interpret=interpret,
             )
-        runner = kern.sharded(d)  # cached per d on the kernel
+        runner = kern.sharded(d, dx=dx)  # cached per (d, dx) on the kernel
         return lambda: runner.run_blocked(
             state, regs, steps=nsteps, m=m, block_h=block_h,
             double_buffer=double_buffer, interpret=interpret,
@@ -258,6 +278,9 @@ class SearchRunner:
         self.scalar_kwargs = dict(scalar_kwargs or {})
         self.fingerprint = fingerprint
         self.halo = workload.halo if halo is None else int(halo)
+        # Column stencil reach for mesh (dx > 1) plans (DESIGN.md §15):
+        # sizes the guard columns the legalizer prices per shard.
+        self.halo_x = int(getattr(workload, "stencil_halo_x", self.halo))
         self.width = self.w if width is None else int(width)
         self.words = workload.words_in if words is None else int(words)
         # Per-stage (words, halo) geometry of a multi-core program: when
@@ -306,18 +329,29 @@ class SearchRunner:
         self._counts: dict[tuple, int] = {}  # plan.key() -> live timings
         self._cal_models: dict[int, object] = {}
         self._cal_mem: list[float] = []  # bandwidth probe, shared across d
+        # ---- next-candidate prefetch (docs/pipeline.md §search) ------------
+        # When a budget cut-off interrupts a strategy, the point it was
+        # about to measure is recorded here; SearchStepper.step hands it
+        # to prefetch() so its compile/warm-up runs on idle devices while
+        # the caller ticks — timed reps never overlap the warm-up
+        # (measure() joins any in-flight prefetch before timing).
+        self.last_blocked = None  # the candidate BudgetExhausted cut off
+        self.prefetched = 0  # warm-ups dispatched (observability)
+        self._prefetch = None  # (plan.key(), Thread) of an in-flight warm-up
 
     # ---- model-side helpers ------------------------------------------------
 
     def point(self, block_h: int, m: int, d: int = 1,
               double_buffer: bool | None = None,
-              fusion: str | None = None) -> DesignPoint | None:
+              fusion: str | None = None,
+              dx: int | None = None) -> DesignPoint | None:
         """Materialize a lattice coordinate through the scalar model.
 
         Strategies use this to price neighborhood moves (LocalRefine's
-        (block_h, m, d, double_buffer) steps) before spending budget on
-        them. ``double_buffer=None`` inherits the sweep's setting (the
-        runner's ``scalar_kwargs``). ``None`` when the runner was built
+        (block_h, m, d, double_buffer, dx) steps) before spending budget
+        on them. ``double_buffer=None`` inherits the sweep's setting (the
+        runner's ``scalar_kwargs``); ``dx=None`` keeps the model's 1-D
+        ring default (DESIGN.md §15). ``None`` when the runner was built
         without a model (custom back ends that only replay frontier
         points).
         """
@@ -328,6 +362,8 @@ class SearchRunner:
             kwargs["double_buffer"] = bool(double_buffer)
         if fusion is not None:
             kwargs["fusion"] = str(fusion)
+        if dx is not None:
+            kwargs["dx"] = int(dx)
         return self.model.evaluate(
             self.workload, int(block_h), int(m), d=int(d), **kwargs,
         )
@@ -344,17 +380,19 @@ class SearchRunner:
             return None
         b = _point_b(point)
         fusion = _point_fusion(point)
+        dx = _point_dx(point)
         try:
             block_h, m, nsteps, double_buffer = resolve_run_plan(
                 self.h, point, self.steps, halo=self.halo,
                 width=self.width, words=self.words, d=d, b=b,
                 stages=self.stages, fusion=fusion,
+                dx=dx, halo_x=self.halo_x,
             )
         except ValueError:
             return None
         return RunPlan(block_h, m, nsteps, d,
                        self.reps if reps is None else int(reps),
-                       double_buffer, b, fusion)
+                       double_buffer, b, fusion, dx)
 
     # ---- cache / study key space -------------------------------------------
 
@@ -389,6 +427,12 @@ class SearchRunner:
                     int(plan.double_buffer), plan.b)
         if plan.fusion:  # "" keeps pre-program cache keys byte-identical
             plan_key = plan_key + (plan.fusion,)
+        if plan.dx > 1:  # 1 keeps pre-mesh cache keys byte-identical
+            # always carry the fusion slot before dx so key tuples stay
+            # unambiguous by length (6 legacy / 7 fusion / 8 fusion+dx)
+            if not plan.fusion:
+                plan_key = plan_key + (plan.fusion,)
+            plan_key = plan_key + (plan.dx,)
         return measure.MeasurementCache.make_key(
             fp, (self.h, self.w), plan_key,
             self.backend, self.interpret, plan.reps, self.warmup,
@@ -451,38 +495,25 @@ class SearchRunner:
             return None
         b = _point_b(point)
         fusion = _point_fusion(point)
+        dx = _point_dx(point)
         reps = self.reps if reps is None else int(reps)
         try:
             block_h, m, nsteps, double_buffer = resolve_run_plan(
                 self.h, point, self.steps, halo=self.halo,
                 width=self.width, words=self.words, d=d, b=b,
                 stages=self.stages, fusion=fusion,
+                dx=dx, halo_x=self.halo_x,
             )
         except ValueError:
             self.skipped_illegal += 1
             return None
-        plan = RunPlan(block_h, m, nsteps, d, reps, double_buffer, b, fusion)
+        plan = RunPlan(block_h, m, nsteps, d, reps, double_buffer, b,
+                       fusion, dx)
 
         cached = True
         wall = self._walls.get(plan.key())  # in-run dedupe, cache-independent
         if wall is None:
-            if fusion:
-                # Program plans need a fusion-aware factory; single-core
-                # back ends never see the kwarg for the "" spec.
-                run = self.run_factory(nsteps, m, block_h, d,
-                                       double_buffer, b=b, fusion=fusion)
-            elif b != 1:
-                # Batched plans need a batch-aware factory; older ones
-                # (and custom back ends) never see the kwarg for b=1.
-                run = self.run_factory(nsteps, m, block_h, d,
-                                       double_buffer, b=b)
-            else:
-                try:
-                    run = self.run_factory(
-                        nsteps, m, block_h, d, double_buffer
-                    )
-                except TypeError:  # legacy 4-arg factories predate the knob
-                    run = self.run_factory(nsteps, m, block_h, d)
+            run = self._factory_run(plan)
             if run is None:
                 return None  # this back end cannot execute the point
             key = None
@@ -494,10 +525,17 @@ class SearchRunner:
                         wall = float(rec["wall_s"])
             if wall is None:
                 if self.budget is not None and self.budget_spent >= self.budget:
+                    # Remember the candidate this cut-off interrupted:
+                    # SearchStepper hands it to prefetch() so its
+                    # compile/warm-up overlaps the caller's ticks.
+                    self.last_blocked = point
                     raise BudgetExhausted(
                         f"measurement budget of {self.budget} exhausted "
                         f"before timing plan {plan.as_dict()}"
                     )
+                # Timed reps never overlap a background warm-up: wait
+                # out any in-flight prefetch before the clock starts.
+                self._join_prefetch()
                 wall, record = self._time(plan, run)
                 self.budget_spent += 1
                 self._counts[plan.key()] = self._counts.get(plan.key(), 0) + 1
@@ -517,7 +555,7 @@ class SearchRunner:
             # raw lattice pick) under the measured platform constants.
             calibrated = self._calibrated_model(d, (block_h, m)).evaluate(
                 self.workload, block_h, m, d=d, double_buffer=double_buffer,
-                b=b, fusion=fusion,
+                b=b, fusion=fusion, dx=dx,
             ).sustained_gflops
         headline = calibrated if calibrated is not None else predicted
         executed = ExecutedPoint(
@@ -541,6 +579,7 @@ class SearchRunner:
             double_buffer=double_buffer,
             b=b,
             fusion=fusion,
+            dx=dx,
         )
         if self.study is not None:
             self.study.record_trial(self, executed, **self.study_meta)
@@ -560,7 +599,99 @@ class SearchRunner:
                 self, tuple(coords), float(violation), **self.study_meta
             )
 
+    # ---- next-candidate prefetch (docs/pipeline.md §search) ---------------
+
+    def prefetch(self, point=None) -> bool:
+        """Dispatch a candidate's compile/warm-up on idle devices.
+
+        The minimal parallel-trial-execution seam: when the trial under
+        measurement uses fewer than the platform's devices
+        (``plan.d < max_devices``), the *next* candidate's un-timed
+        warm-up call runs on a background thread so its compile overlaps
+        the caller's ticks instead of the next timed step.
+        ``point=None`` consumes :attr:`last_blocked` — the candidate the
+        last :exc:`BudgetExhausted` cut off, which is exactly what the
+        strategy will ask for next (:class:`SearchStepper` relies on
+        this). Measured wall-clock stays per-trial-isolated:
+        :meth:`measure` joins any in-flight warm-up before its timed
+        reps start, so timings never overlap. Returns ``True`` when a
+        warm-up was dispatched.
+        """
+        if point is None:
+            point, self.last_blocked = self.last_blocked, None
+        if point is None:
+            return False
+        plan = self.plan_for(point)
+        if plan is None or self._walls.get(plan.key()) is not None:
+            return False
+        if plan.d >= self.max_devices:
+            return False  # the mesh uses every device: nothing is idle
+        if self._prefetch is not None:
+            if self._prefetch[1].is_alive():
+                return False  # one in-flight warm-up at a time
+            self._prefetch = None
+        run = self._factory_run(plan)
+        if run is None:
+            return False
+        import threading
+
+        def warm():
+            try:
+                run()
+            except Exception:
+                pass  # a failing warm-up must never kill the search
+
+        thread = threading.Thread(target=warm, daemon=True)
+        thread.start()
+        self._prefetch = (plan.key(), thread)
+        self.prefetched += 1
+        return True
+
+    def _join_prefetch(self) -> None:
+        """Wait out any in-flight warm-up (timed reps never overlap it)."""
+        if self._prefetch is not None:
+            self._prefetch[1].join()
+            self._prefetch = None
+
     # ---- internals ---------------------------------------------------------
+
+    def _factory_run(self, plan: RunPlan):
+        """Build the nullary launch callable for a concrete plan.
+
+        One dispatch chain shared by :meth:`measure` and
+        :meth:`prefetch`: newer factory kwargs (``fusion``/``b``/``dx``)
+        are only passed when the plan needs them, so legacy and custom
+        back ends keep working unmodified; a back end that cannot
+        express the plan returns (or is treated as) ``None``.
+        """
+        nsteps, m, block_h = plan.steps, plan.m, plan.block_h
+        d, double_buffer, b = plan.d, plan.double_buffer, plan.b
+        fusion, dx = plan.fusion, plan.dx
+        if dx != 1:
+            # Mesh plans need a dx-aware factory (DESIGN.md §15); back
+            # ends that predate the axis cannot execute them.
+            kwargs = {"b": b, "dx": dx}
+            if fusion:
+                kwargs["fusion"] = fusion
+            try:
+                return self.run_factory(nsteps, m, block_h, d,
+                                        double_buffer, **kwargs)
+            except TypeError:
+                return None
+        if fusion:
+            # Program plans need a fusion-aware factory; single-core
+            # back ends never see the kwarg for the "" spec.
+            return self.run_factory(nsteps, m, block_h, d,
+                                    double_buffer, b=b, fusion=fusion)
+        if b != 1:
+            # Batched plans need a batch-aware factory; older ones
+            # (and custom back ends) never see the kwarg for b=1.
+            return self.run_factory(nsteps, m, block_h, d,
+                                    double_buffer, b=b)
+        try:
+            return self.run_factory(nsteps, m, block_h, d, double_buffer)
+        except TypeError:  # legacy 4-arg factories predate the knob
+            return self.run_factory(nsteps, m, block_h, d)
 
     def _time(self, plan: RunPlan, run: Callable) -> tuple[float, dict]:
         """One live timing: the injected timer or the honest harness."""

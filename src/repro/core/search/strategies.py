@@ -91,7 +91,7 @@ def _ranked_candidates(sweep, runner: SearchRunner) -> list:
         if plan is None:
             continue
         dedup = (plan.block_h, plan.m, plan.steps, plan.d,
-                 plan.double_buffer, plan.b, plan.fusion)
+                 plan.double_buffer, plan.b, plan.fusion, plan.dx)
         if dedup in seen:
             continue
         seen.add(dedup)
@@ -142,7 +142,8 @@ class LocalRefine:
     frontier points are measured, then the best measured point's
     one-coordinate moves — block_h to the adjacent legal divisors
     (first-class, not just whatever legalization returned), m and d
-    halved/doubled, double_buffer flipped (ping/pong vs single-buffer
+    halved/doubled, the mesh column axis dx halved/doubled at fixed d
+    (DESIGN.md §15), double_buffer flipped (ping/pong vs single-buffer
     streaming, docs/pipeline.md §stream) — are measured, moving
     whenever a neighbor beats the incumbent, until a round yields no
     improvement, ``max_rounds`` is hit, or the budget runs out.
@@ -162,7 +163,7 @@ class LocalRefine:
             if e is None:
                 return None
             plan = (e.block_h, e.m, e.steps, e.d, e.double_buffer, e.b,
-                    e.fusion)
+                    e.fusion, e.dx)
             if plan not in seen:
                 seen.add(plan)
                 out.append(e)
@@ -179,12 +180,13 @@ class LocalRefine:
                 return out
             for _ in range(self.max_rounds):
                 improved = False
-                for nb, nm, nd, ndb in self._neighborhood(best, runner):
+                for nb, nm, nd, ndb, ndx in self._neighborhood(best, runner):
                     # Moves stay within the incumbent's fusion partition
                     # (docs/pipeline.md §program) — the fusion axis is
                     # explored by the sweep lattice, not the hill-climb.
                     pt = runner.point(nb, nm, nd, double_buffer=ndb,
-                                      fusion=best.fusion or None)
+                                      fusion=best.fusion or None,
+                                      dx=ndx)
                     if pt is None or not pt.feasible:
                         continue
                     e = visit(pt)
@@ -203,31 +205,40 @@ class LocalRefine:
     def _neighborhood(best: ExecutedPoint, runner: SearchRunner):
         """One-coordinate moves from the incumbent's *legalized* plan."""
         bh, m, d, db = best.block_h, best.m, best.d, best.double_buffer
-        moves: list[tuple[int, int, int, bool]] = []
-        # block_h: the adjacent legal divisors for this (m, d, db) — the
-        # chain blocking_plan chooses among, searched directly.
+        dx = max(1, int(getattr(best, "dx", 1) or 1))
+        moves: list[tuple[int, int, int, bool, int]] = []
+        # block_h: the adjacent legal divisors for this (m, d, db, dx) —
+        # the chain blocking_plan chooses among, searched directly.
         chain = legal_block_values(
             runner.h, m, halo=runner.halo, width=runner.width,
             words=runner.words, d=d, double_buffer=db,
+            dx=dx, halo_x=runner.halo_x if dx > 1 else 0,
         )
         below = [v for v in chain if v < bh]
         above = [v for v in chain if v > bh]
         if below:
-            moves.append((below[-1], m, d, db))
+            moves.append((below[-1], m, d, db, dx))
         if above:
-            moves.append((above[0], m, d, db))
+            moves.append((above[0], m, d, db, dx))
         # m: halve / double the fused-step count.
         if m > 1:
-            moves.append((bh, max(1, m // 2), d, db))
-        moves.append((bh, m * 2, d, db))
+            moves.append((bh, max(1, m // 2), d, db, dx))
+        moves.append((bh, m * 2, d, db, dx))
         # d: halve / double the device axis within the platform.
-        if d > 1:
-            moves.append((bh, m, d // 2, db))
+        if d > 1 and (d // 2) % dx == 0:
+            moves.append((bh, m, d // 2, db, dx))
         if 2 * d <= runner.max_devices and runner.h % (2 * d) == 0:
-            moves.append((bh, m, 2 * d, db))
+            moves.append((bh, m, 2 * d, db, dx))
+        # dx: reshape the mesh at fixed total device count (DESIGN.md
+        # §15) — trade row shards for column shards, the move that
+        # matches the mesh to the grid aspect.
+        if dx > 1:
+            moves.append((bh, m, d, db, dx // 2))
+        if d % (2 * dx) == 0 and runner.w % (2 * dx) == 0:
+            moves.append((bh, m, d, db, 2 * dx))
         # double_buffer: flip the streamed launch's buffer protocol
         # (ping/pong overlap vs the single-buffer streaming fallback).
-        moves.append((bh, m, d, not db))
+        moves.append((bh, m, d, not db, dx))
         return moves
 
 
@@ -345,6 +356,12 @@ class SearchStepper:
             # The strategy finished without wanting another timing.
             self.done = True
             return None
+        # Parallel trial execution, minimal form (docs/pipeline.md
+        # §search): the budget cut-off recorded the candidate the
+        # strategy wanted next; warm its compile on idle devices while
+        # the caller ticks. measure() joins the warm-up before its timed
+        # reps, so measured wall-clock stays per-trial-isolated.
+        self.runner.prefetch()
         fresh = [e for e in self.executed if not e.cached]
         return fresh[-1] if fresh else None
 

@@ -175,6 +175,10 @@ class Study:
                 # "" for journals older than the fusion plan dimension
                 # (docs/pipeline.md §program).
                 str(point.get("fusion", "") or ""),
+                # 1 (the row ring) for journals older than the mesh
+                # column axis (DESIGN.md §15): a d-only record resumes
+                # into the (dy, dx) identity with zero re-measurement.
+                int(point.get("dx", 1) or 1),
             )
         coords = rec.get("coords")
         if coords is not None:

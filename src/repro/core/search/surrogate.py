@@ -105,9 +105,14 @@ class TPESearch:
             b = (int(sweep.data["b"][i]) if "b" in sweep.data else 1)
             fus = (str(sweep.data["fusion"][i])
                    if "fusion" in sweep.data else "")
+            dxv = (max(1, int(sweep.data["dx"][i]))
+                   if "dx" in sweep.data else 1)
             # Candidate coords stay numeric (the study journals them as
             # ints); the fusion spec joins the dedupe key separately.
-            coords = (bh, m, d, b)
+            # The mesh axis joins only when column-sharded (DESIGN.md
+            # §15), keeping pre-mesh coords — and old study violation
+            # records — byte-identical.
+            coords = (bh, m, d, b) if dxv == 1 else (bh, m, d, b, dxv)
             if coords + (fus,) in seen_coords:
                 continue
             seen_coords.add(coords + (fus,))
@@ -123,24 +128,30 @@ class TPESearch:
                 viol = constraint_violation(
                     runner.h, bh, m, halo=runner.halo, width=runner.width,
                     words=runner.words, d=d, double_buffer=req_db, b=b,
+                    dx=dxv, halo_x=runner.halo_x,
                 )
                 out.append(_Candidate(
                     point=pt, coords=coords,
-                    x=self._features(bh, m, d, req_db, b, fus),
+                    x=self._features(bh, m, d, req_db, b, fus, dxv),
                     plan=None, violation=max(viol, 1e-9),
                     model_gflops=float(gflops[i]),
                 ))
                 continue
             pkey = (plan.block_h, plan.m, plan.steps, plan.d,
-                    plan.double_buffer, plan.b, plan.fusion)
+                    plan.double_buffer, plan.b, plan.fusion, plan.dx)
             if pkey in seen_plans:
                 continue  # same concrete plan: model-best spelling wins
             seen_plans.add(pkey)
             out.append(_Candidate(
                 point=pt,
-                coords=(plan.block_h, plan.m, plan.d, plan.b),
+                coords=(
+                    (plan.block_h, plan.m, plan.d, plan.b)
+                    if plan.dx == 1
+                    else (plan.block_h, plan.m, plan.d, plan.b, plan.dx)
+                ),
                 x=self._features(plan.block_h, plan.m, plan.d,
-                                 plan.double_buffer, plan.b, plan.fusion),
+                                 plan.double_buffer, plan.b, plan.fusion,
+                                 plan.dx),
                 plan=plan, violation=0.0,
                 model_gflops=float(gflops[i]),
             ))
@@ -149,7 +160,7 @@ class TPESearch:
     @staticmethod
     def _features(bh: int, m: int, d: int,
                   double_buffer: bool = True, b: int = 1,
-                  fusion: str = "") -> np.ndarray:
+                  fusion: str = "", dx: int = 1) -> np.ndarray:
         """Log2 lattice coordinates plus the binary buffer-protocol axis:
         the natural metric of a power-of-two sweep (one halving/doubling
         = one unit in every dimension; a double_buffer flip likewise,
@@ -157,12 +168,16 @@ class TPESearch:
         (docs/pipeline.md §serve), and a program's fusion partition
         (docs/pipeline.md §program) contributes its cluster count in
         log2 — finer partitions are farther from fully fused, and
-        single-core plans ("" = one cluster) sit at the legacy origin."""
+        single-core plans ("" = one cluster) sit at the legacy origin.
+        The mesh column axis dx (DESIGN.md §15) joins in log2 as well;
+        ring plans (dx = 1) contribute 0, so pre-mesh sweeps keep their
+        pairwise distances — and their seeded sampling order — exactly."""
         nclusters = fusion.count("+") + 1 if fusion else 1
         return np.array(
             [math.log2(max(1, bh)), math.log2(max(1, m)),
              math.log2(max(1, d)), float(bool(double_buffer)),
-             math.log2(max(1, b)), math.log2(max(1, nclusters))], float,
+             math.log2(max(1, b)), math.log2(max(1, nclusters)),
+             math.log2(max(1, dx))], float,
         )
 
     # ---- density model -----------------------------------------------------

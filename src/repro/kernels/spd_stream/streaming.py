@@ -34,7 +34,11 @@ Like the BlockSpec launch, state may carry extra leading dimensions —
 (docs/pipeline.md §serve, DESIGN.md §13): rows stay on axis ``-2``,
 every stripe DMA moves all leading axes whole, and the VMEM scratch
 stacks scale by B exactly as the legalizer's
-``stripe_vmem_bytes(..., b=B)`` prices them.
+``stripe_vmem_bytes(..., b=B)`` prices them. The width axis is opaque
+the same way: under a column-sharded mesh (``dx > 1``, DESIGN.md §15)
+``W`` arrives guard-column-extended to ``W/dx + 2·m·halo_x`` and the
+legalizer prices the stripes at that width
+(``stripe_vmem_bytes(..., halo_x=)``); the walk itself is unchanged.
 """
 
 from __future__ import annotations

@@ -140,15 +140,17 @@ def batch_pspec(dp_axes) -> P:
     return P(dp_axes, None)
 
 
-def stream_grid_pspec(axis: str = "d") -> P:
+def stream_grid_pspec(axis: str = "d", axis_x: str | None = None) -> P:
     """(P, H, W) stream-grid sharding: rows (y) split across ``axis``.
 
     The channel dim stays whole (every shard needs all P fields of its
     rows) and rows shard contiguously so each device owns one H/d-row
     band — the decomposition ``repro.core.distribute`` halo-exchanges
-    (docs/pipeline.md §distribute).
+    (docs/pipeline.md §distribute). ``axis_x`` additionally splits the
+    columns (x) for the 2-D device mesh (DESIGN.md §15): each device
+    then owns one contiguous ``(H/dy, W/dx)`` tile.
     """
-    return P(None, axis, None)
+    return P(None, axis, axis_x)
 
 
 def cache_pspec(path, leaf, *, dp_axes, n_kv_heads: int,

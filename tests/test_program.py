@@ -331,7 +331,8 @@ def test_plan_fields_single_source():
     from repro.core import search
 
     assert tuple(f.name for f in fields(RunPlan)) == PLAN_FIELDS
-    assert PLAN_FIELDS[-1] == "fusion"
+    # mesh axis (DESIGN.md §15) appended after fusion, defaults last
+    assert PLAN_FIELDS[-2:] == ("fusion", "dx")
     # the search package re-exports the one definition
     assert search.RunPlan is RunPlan
     assert search.PLAN_FIELDS is PLAN_FIELDS
@@ -342,7 +343,7 @@ def test_plan_fields_single_source():
 def test_run_plan_round_trip_and_back_compat():
     p = RunPlan(8, 2, 4, 1, 3, False, 2, "2+1")
     assert RunPlan.from_dict(p.as_dict()) == p
-    assert p.key() == (8, 2, 4, 1, 3, False, 2, "2+1")
+    assert p.key() == (8, 2, 4, 1, 3, False, 2, "2+1", 1)
     # records written before the fusion (and b, double_buffer, reps)
     # dimensions existed resolve to the legacy defaults
     old = RunPlan.from_dict({"block_h": 8, "m": 2, "steps": 4, "d": 1})
